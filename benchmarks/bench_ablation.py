@@ -1,0 +1,49 @@
+"""Paper Fig. 6 optimization ladder V0 -> V3 on one fixed shape.
+
+V0 inner-product and V1 outer-product are CPU-timed jnp restatements;
+V2 (VMEM staging) and V3 (+pipelined prefetch) exist inside the Pallas
+kernel, so their deltas are reported from the v5e model: V2 = V3 without
+pipelining overlap (memory and compute serialize); V3 = the shipped
+kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import jit
+
+from benchmarks.common import emit, rand, timeit
+from repro.core import perf_model
+from repro.kernels import ref
+
+
+def run():
+    m = k = 4096
+    n = 8
+    a, b = rand(1, (m, k)), rand(2, (k, n))
+    rows = []
+    t0 = timeit(jit(ref.tsm2r_v0_inner), a, b)
+    t1 = timeit(jit(ref.tsm2r_v1_outer), a, b)
+    t_dot = timeit(jit(ref.tsm2r_ref), a, b)
+    rows.append(("ablation_v0_inner_cpu", round(t0, 1), f"speedup_vs_v0=1.00"))
+    rows.append(("ablation_v1_outer_cpu", round(t1, 1),
+                 f"speedup_vs_v0={t0 / t1:.2f}"))
+    rows.append(("ablation_xla_dot_cpu", round(t_dot, 1),
+                 f"speedup_vs_v0={t0 / t_dot:.2f}"))
+    bm, bk = perf_model.choose_params_tsm2r(m, k, n)
+    spec = perf_model.V5E
+    bpe = perf_model.bytes_per_elem(jnp.bfloat16)
+    gm, gk = m // bm, -(-k // bk)
+    bytes_total = (m * k + k * 128 * gm + m * 128) * bpe
+    t_mem = bytes_total / spec.hbm_bw
+    t_comp = 2 * m * k * n / (spec.peak_flops_bf16 * n / 128)
+    v2 = t_mem + t_comp + spec.dma_latency * gm * gk   # no overlap, no prefetch
+    v3 = perf_model.tsm2r_model_time(m, k, n, bm, bk)  # pipelined (shipped)
+    rows.append(("ablation_v2_staged_v5e_model", round(v2 * 1e6, 1),
+                 "VMEM staging, serialized DMA/compute"))
+    rows.append(("ablation_v3_pipelined_v5e_model", round(v3 * 1e6, 1),
+                 f"speedup_v3_over_v2={v2 / v3:.2f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

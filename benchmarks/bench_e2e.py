@@ -1,0 +1,44 @@
+"""End-to-end micro-benchmarks: train-step and decode-step throughput on
+the reduced configs (CPU wall clock -- relative regressions tracking)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs import registry
+from repro.data import pipeline
+from repro.models import model
+from repro.optim import adamw
+from repro.train import train_step as ts
+
+
+def run():
+    rows = []
+    for arch in ("llama3.2-3b", "mixtral-8x7b", "rwkv6-1.6b"):
+        cfg = registry.get_config(arch, smoke=True)
+        dcfg = pipeline.DataConfig(seed=0, seq_len=64, global_batch=4,
+                                   vocab_size=cfg.vocab_size)
+        opt = adamw.AdamWConfig(lr=1e-3)
+        state = ts.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        step = jax.jit(ts.make_train_step(cfg, opt))
+        batch = jax.tree.map(jnp.asarray, pipeline.batch_for_step(dcfg, 0))
+        us = timeit(lambda s, b: step(s, b)[0], state, batch, reps=3, warmup=1)
+        toks = 4 * 64
+        rows.append((f"train_step_{arch}_smoke", round(us, 0),
+                     f"tokens_per_s={toks / (us / 1e6):.0f}"))
+
+        params = model.init(jax.random.PRNGKey(0), cfg)
+        cache = model.init_cache(cfg, 2, 64)
+        dec = jax.jit(lambda p, t, pos, c: model.decode_step(p, cfg, t, pos, c))
+        tok = jnp.zeros((2, 1), jnp.int32)
+        us = timeit(lambda p, t, c: dec(p, t, 5, c), params, tok, cache,
+                    reps=3, warmup=1)
+        rows.append((f"decode_step_{arch}_smoke", round(us, 0),
+                     f"tokens_per_s={2 / (us / 1e6):.0f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

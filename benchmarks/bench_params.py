@@ -1,0 +1,38 @@
+"""Paper Table 3/4 analogue: the parameter-chooser's output per shape,
+plus the bound classification (t2^threshold decision) per GPU->TPU port."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import perf_model, tsmm
+
+
+def run():
+    rows = []
+    rows.append(("t2_threshold_v5e_bf16",
+                 round(perf_model.t2_threshold(dtype=jnp.bfloat16), 1),
+                 "n below => memory-bound (all paper shapes)"))
+    rows.append(("t2_threshold_v5e_f32",
+                 round(perf_model.t2_threshold(dtype=jnp.float32), 1), ""))
+    for (m, k, n) in [(20480, 20480, 2), (20480, 20480, 16), (30720, 30720, 8),
+                      (15360, 15360, 16), (10_000_000, 16, 16), (102400, 4, 4),
+                      (4096, 4096, 1024)]:
+        kind = tsmm.classify_gemm(m, k, n)
+        bound = perf_model.classify(m, k, n)
+        if kind == "tsm2r":
+            bm, bk = perf_model.choose_params_tsm2r(m, k, n)
+            vmem = perf_model.tsm2r_vmem_usage(bm, bk, n, jnp.bfloat16)
+            det = f"bound={bound};bm={bm};bk={bk};vmem_kb={vmem//1024}"
+        elif kind == "tsm2l":
+            bm = perf_model.choose_params_tsm2l(m, k, n)
+            det = f"bound={bound};bm={bm}"
+        else:
+            det = f"bound={bound};dense-XLA path"
+        rows.append((f"params_m{m}_k{k}_n{n}", 0, f"kind={kind};{det}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Fig. 5 (tcf sweep) + Fig. 13/14 (TSM2L speedup / bandwidth).
+
+The tcf sweep maps to block_m (rows per grid cell): small block_m = many
+shallow grid steps (the latency-bound naive port, paper Fig. 4); large
+block_m = fat cells that amortize pipeline overhead (paper's tcf=8 best
+case at m=1e7)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import jit
+
+from benchmarks.common import emit, rand, timeit
+from repro.core import perf_model
+from repro.kernels import ref
+
+MS = (10_000, 100_000, 1_000_000, 10_000_000)
+KNS = ((8, 8), (16, 16))
+
+
+def run():
+    rows = []
+    # Fig. 5 analogue: block_m sweep at m=1e7, k=n=16
+    m, k, n = 10_000_000, 16, 16
+    for bm in (256, 1024, 4096, 16384):
+        t = perf_model.tsm2l_model_time(m, k, n, bm)
+        util = min(1.0, (m * k + k * n + m * n) * 2 / (t * perf_model.V5E.hbm_bw))
+        rows.append((f"tsm2l_tcf_sweep_bm{bm}", round(t * 1e6, 1),
+                     f"bw_util={util:.3f}"))
+    # Fig. 13/14 analogue
+    for m in MS:
+        for k, n in KNS:
+            bm = perf_model.choose_params_tsm2l(m, k, n)
+            t = perf_model.tsm2l_model_time(m, k, n, bm)
+            util = min(1.0, (m * k + k * n + m * n) * 2 / (t * perf_model.V5E.hbm_bw))
+            # generic-GEMM baseline: pads both k and n to the 128 MXU tile
+            b = 2
+            t_base = max((m * 128 + 128 * 128 + m * 128) * b / perf_model.V5E.hbm_bw,
+                         2 * m * 128 * 128 / perf_model.V5E.peak_flops_bf16)
+            rows.append((f"tsm2l_v5e_m{m}_k{k}n{n}", round(t * 1e6, 1),
+                         f"bw_util={util:.3f};speedup_vs_generic={t_base/t:.2f};bm={bm}"))
+    # CPU-timed reference path at a scaled shape
+    for m in (100_000, 1_000_000):
+        a, bb = rand(m, (m, 16)), rand(m + 1, (16, 16))
+        t_dot = timeit(jit(ref.tsm2l_ref), a, bb)
+        rows.append((f"tsm2l_cpu_m{m}_dot", round(t_dot, 1), ""))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

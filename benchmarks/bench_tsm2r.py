@@ -1,0 +1,63 @@
+"""Paper Fig. 6/10 (TSM2R speedup) + Fig. 7/11 (bandwidth utilization).
+
+Rows per (m=k, n): XLA-dot CPU baseline time; V0 (inner-product, the
+paper's cuBLAS-workaround strawman) and V1 (outer-product) CPU times; the
+modeled v5e kernel time; modeled bandwidth & compute utilization (the
+paper's score metric); and the modeled speedup over an ideal-dense-MXU
+baseline at the same shape (the cuBLAS-analogue: min(compute-bound,
+memory-bound) time for XLA's generic tiling which re-tiles B per 128-lane
+MXU pass -- see derivation in EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import jit
+
+from benchmarks.common import emit, rand, timeit
+from repro.core import perf_model
+from repro.kernels import ref
+
+# CPU-timed shapes (scaled) + modeled-only paper shapes.
+CPU_SHAPES = [(2048, 2048), (4096, 4096)]
+PAPER_SHAPES = [(10240, 10240), (20480, 20480), (30720, 30720)]
+NS = (2, 4, 8, 16)
+
+
+def xla_baseline_model_time(m, k, n, spec=perf_model.V5E, dtype=jnp.bfloat16):
+    """v5e model of the vendor-generic GEMM on tall-skinny input: pads n to
+    the 128-lane MXU tile => moves/computes 128/n more than useful work."""
+    b = perf_model.bytes_per_elem(dtype)
+    n_pad = max(n, 128)
+    t_mem = (m * k + k * n_pad + m * n_pad) * b / spec.hbm_bw
+    t_comp = 2 * m * k * n_pad / spec.peak_flops(dtype)
+    return max(t_mem, t_comp)
+
+
+def run():
+    rows = []
+    for m, k in CPU_SHAPES:
+        for n in NS:
+            a = rand(m + n, (m, k))
+            b = rand(m - n, (k, n))
+            t_dot = timeit(jit(ref.tsm2r_ref), a, b)
+            t_v1 = timeit(jit(ref.tsm2r_v1_outer), a, b)
+            t_v0 = (timeit(jit(ref.tsm2r_v0_inner), a, b)
+                    if n <= 8 else float("nan"))
+            rows.append((f"tsm2r_cpu_m{m}_n{n}_dot", round(t_dot, 1),
+                         f"v0={t_v0:.0f}us;v1={t_v1:.0f}us"))
+    for m, k in CPU_SHAPES + PAPER_SHAPES:
+        for n in NS:
+            bm, bk = perf_model.choose_params_tsm2r(m, k, n)
+            t_model = perf_model.tsm2r_model_time(m, k, n, bm, bk)
+            util = perf_model.modeled_bandwidth_utilization(m, k, n, bm, bk)
+            cutil = perf_model.modeled_compute_utilization(m, k, n, bm, bk)
+            t_base = xla_baseline_model_time(m, k, n)
+            rows.append((
+                f"tsm2r_v5e_m{m}_n{n}", round(t_model * 1e6, 1),
+                f"bw_util={util:.3f};comp_util={cutil:.4f};"
+                f"speedup_vs_generic={t_base / t_model:.2f};bm={bm};bk={bk}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Shared benchmark utilities.
+
+Measurement policy on this CPU container (documented in EXPERIMENTS.md):
+* jnp/XLA paths (dot baseline, V0/V1 ladder) are WALL-CLOCK timed -- they
+  compile natively, so relative CPU timings are meaningful proxies.
+* Pallas kernels run in interpret mode here (Python), so their wall time
+  is meaningless; the kernel numbers reported are the *modeled v5e* terms
+  from core/perf_model.py (the paper's own Fig.7/11 metric -- bandwidth
+  fraction), plus numerics validation against the oracle.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall time (us) of jitted fn."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32,
+                              -1, 1).astype(dtype)
+
+
+def emit(rows, header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

@@ -1,0 +1,40 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV per section. The roofline tables
+(arch x shape cells) are produced separately by launch/dryrun.py +
+roofline_report.py since they need the 512-device placeholder runtime.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_ablation, bench_e2e, bench_params,
+                            bench_rect, bench_tsm2l, bench_tsm2r)
+    sections = [
+        ("Fig6/7+10/11: TSM2R speedup + utilization", bench_tsm2r.run),
+        ("Fig5+13/14: TSM2L tcf sweep + speedup", bench_tsm2l.run),
+        ("Fig12: non-square input", bench_rect.run),
+        ("Table3/4: kernel parameters + bound classes", bench_params.run),
+        ("Fig6 ladder: V0->V3 ablation", bench_ablation.run),
+        ("e2e: train/decode step throughput", bench_e2e.run),
+    ]
+    failures = 0
+    for title, fn in sections:
+        print(f"\n# === {title} ===")
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""TPU port of the TSM2X analytic performance model (paper Section 3.1.6-3.1.9).
+
+The paper drives kernel-parameter selection (t1, t2, t3) from an analytic
+model built on three ingredients: (a) a compute-vs-memory-bound classifier
+``t2_threshold = PeakPerf / PeakBand * bytes_per_elem``, (b) occupancy /
+Little's-law utilization terms, and (c) a gradient-descent search over the
+parameter space (Algorithm 5).
+
+On TPU the same decision structure survives with different hardware terms:
+
+* ``t1`` (threads per block / B-tile rows)  -> ``block_k``: rows of B staged
+  per VMEM window, which is also the A-tile reduction depth per grid step.
+* ``t2`` (C columns per thread in flight)   -> ``block_n``: output columns
+  held in the VMEM accumulator (for the paper's n <= 32 this is just n).
+* ``t3`` (A elements prefetched per thread) -> ``block_m``: A-tile rows per
+  DMA; Mosaic's automatic double-buffering replaces the hand-rolled
+  nextA/nextB register prefetch of Algorithm 4.
+* occupancy / warp latency -> grid-cell parallelism and DMA pipeline depth.
+
+The search (``choose_params_*``) is a discrete argmax over the modeled time
+instead of continuous gradient descent: the TPU parameter space is small and
+hardware-quantized (sublane 8 x lane 128 tiles), so enumerate-and-score is
+exact where GD was approximate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+import jax.numpy as jnp
+
+Bound = Literal["memory", "compute", "latency"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    """Hardware constants. Defaults: TPU v5e (task-spec numbers)."""
+
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12
+    peak_flops_f32: float = 197e12 / 4  # MXU f32 path ~ 1/4 of bf16
+    hbm_bw: float = 819e9
+    ici_bw_per_link: float = 50e9
+    vmem_bytes: int = 128 * 2**20
+    # Fraction of VMEM the pipeliner may use for in-flight windows
+    # (double-buffered in + out + scratch accumulator + compiler headroom).
+    vmem_usable: float = 0.5
+    # DMA issue-to-first-byte latency (s); TPU HBM round trip ~ O(1us).
+    dma_latency: float = 1e-6
+    # Per-grid-step fixed overhead of the Mosaic pipeline (s).
+    step_overhead: float = 2e-7
+    # MXU native tile (systolic array is 128x128; sublane granularity 8).
+    lane: int = 128
+    sublane: int = 8
+
+    def peak_flops(self, dtype) -> float:
+        return self.peak_flops_bf16 if jnp.dtype(dtype).itemsize <= 2 else self.peak_flops_f32
+
+
+V5E = TPUSpec()
+
+
+def bytes_per_elem(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def t2_threshold(spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> float:
+    """Paper eq. (Section 3.1.8): boundary value of t2 (here: of n).
+
+    n below the threshold => the TSM2 problem is memory-bound. On v5e/bf16
+    this is ~481, so every paper shape (n <= 32) is memory-bound: the
+    kernel's whole job is streaming A at HBM speed.
+    """
+    return spec.peak_flops(dtype) / spec.hbm_bw * bytes_per_elem(dtype)
+
+
+def arithmetic_intensity(m: int, k: int, n: int, dtype=jnp.bfloat16) -> float:
+    """FLOPs per HBM byte moved, assuming each operand moves exactly once."""
+    flops = 2.0 * m * k * n
+    bts = (m * k + k * n + m * n) * bytes_per_elem(dtype)
+    return flops / bts
+
+
+def classify(m: int, k: int, n: int, spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> Bound:
+    """Paper Section 1: the three regimes of tall-and-skinny GEMM.
+
+    * m ~ k >> n, n below threshold  -> memory-bound (TSM2R main case)
+    * m ~ k >> n, n above threshold  -> compute-bound
+    * m >> k ~ n (k tiny)            -> latency-bound (TSM2L case): the
+      per-grid-cell reduction is too shallow to hide DMA latency.
+    """
+    ridge = spec.peak_flops(dtype) / spec.hbm_bw  # flops per byte at the roofline ridge
+    # Latency test: with k tiny, even a maximal A tile gives a pipeline only
+    # a few steps deep; per-cell work ~ bm*k*n flops vs ~us-scale latency.
+    if k <= 4 * spec.lane and k <= 4 * n * spec.sublane:
+        return "latency"
+    if arithmetic_intensity(m, k, n, dtype) < ridge:
+        return "memory"
+    return "compute"
+
+
+# ---------------------------------------------------------------------------
+# Modeled execution time (the napkin math behind parameter choice)
+# ---------------------------------------------------------------------------
+
+def _roundup(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+def tsm2r_vmem_usage(bm: int, bk: int, n: int, dtype) -> int:
+    """VMEM bytes for one grid cell, double-buffered in-streams + acc + out."""
+    b = bytes_per_elem(dtype)
+    n_pad = _roundup(n, 128)
+    a_win = 2 * bm * bk * b          # double-buffered A window
+    b_win = 2 * bk * n_pad * b       # double-buffered B window
+    acc = bm * n_pad * 4             # f32 accumulator scratch
+    out = bm * n_pad * b             # output window
+    return a_win + b_win + acc + out
+
+
+def tsm2r_model_time(m: int, k: int, n: int, bm: int, bk: int,
+                     spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> float:
+    """Modeled wall time of the TSM2R kernel on ``spec``.
+
+    Memory term: A moves once; B's (bk, n) window is re-fetched once per
+    m-block (the paper's n/t1 re-load factor becomes m/bm here); C written
+    once. Compute term: MXU time at n/lane utilization (skinny n wastes MXU
+    columns -- irrelevant while memory-bound, harmful past the threshold).
+    Latency term: pipeline prologue + per-step overhead; deep grids amortize.
+    """
+    b = bytes_per_elem(dtype)
+    gm, gk = math.ceil(m / bm), math.ceil(k / bk)
+    steps = gm * gk
+    a_bytes = m * k * b
+    b_bytes = k * _roundup(n, 128) * b * gm     # refetched per m-block
+    c_bytes = m * _roundup(n, 128) * b
+    t_mem = (a_bytes + b_bytes + c_bytes) / spec.hbm_bw
+    # MXU: (bm, bk) x (bk, n) per step; effective peak scales with n/lane.
+    mxu_eff = min(n, spec.lane) / spec.lane
+    t_comp = 2.0 * m * k * max(n, 1) / (spec.peak_flops(dtype) * max(mxu_eff, 1e-3))
+    t_lat = spec.dma_latency + steps * spec.step_overhead
+    return max(t_mem, t_comp) + t_lat
+
+
+def tsm2l_model_time(m: int, k: int, n: int, bm: int,
+                     spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> float:
+    """TSM2L: whole B in VMEM, one pass over A, grid over m only.
+
+    The tcf trade of the paper (fewer, fatter threads) appears as the
+    bm-vs-grid-depth term: tiny bm => many shallow steps => per-step
+    overhead dominates (latency-bound); huge bm => too few cells to overlap
+    DMA with compute across steps.
+    """
+    b = bytes_per_elem(dtype)
+    steps = math.ceil(m / bm)
+    t_mem = (m * k + k * n + m * _roundup(n, 128)) * b / spec.hbm_bw
+    mxu_eff = min(n, spec.lane) / spec.lane * min(k, spec.lane) / spec.lane
+    t_comp = 2.0 * m * k * n / (spec.peak_flops(dtype) * max(mxu_eff, 1e-3))
+    # Pipeline needs >= 2 steps to overlap at all; penalize degenerate grids.
+    overlap_penalty = 2.0 if steps < 2 else 1.0
+    t_lat = spec.dma_latency * overlap_penalty + steps * spec.step_overhead
+    return max(t_mem, t_comp) + t_lat
+
+
+def tsmt_model_time(m: int, a: int, bdim: int, bm: int, ba: int,
+                    spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> float:
+    b = bytes_per_elem(dtype)
+    ga, gm = math.ceil(a / ba), math.ceil(m / bm)
+    x_bytes = m * a * b
+    y_bytes = m * _roundup(bdim, 128) * b * ga   # Y refetched per a-block
+    t_mem = (x_bytes + y_bytes) / spec.hbm_bw
+    mxu_eff = min(bdim, spec.lane) / spec.lane
+    t_comp = 2.0 * m * a * bdim / (spec.peak_flops(dtype) * max(mxu_eff, 1e-3))
+    t_lat = spec.dma_latency + ga * gm * spec.step_overhead
+    return max(t_mem, t_comp) + t_lat
+
+
+# ---------------------------------------------------------------------------
+# Parameter choice (paper Algorithm 5, discrete TPU analogue)
+# ---------------------------------------------------------------------------
+
+_BM_CANDIDATES = (256, 512, 1024, 2048, 4096)
+_BK_CANDIDATES = (128, 256, 512, 1024, 2048)
+
+
+def choose_params_tsm2r(m: int, k: int, n: int, spec: TPUSpec = V5E,
+                        dtype=jnp.bfloat16) -> tuple[int, int]:
+    """Pick (block_m, block_k) minimizing modeled time under the VMEM budget.
+
+    Same contract as the paper's Algorithm 5 (choose t2/t3 per bound class,
+    then offline-profile t1): we enumerate the hardware-quantized candidate
+    grid and take the argmin of the modeled time; ties break toward deeper
+    k-pipelines (better DMA overlap).
+    """
+    budget = spec.vmem_bytes * spec.vmem_usable
+    best, best_t = None, float("inf")
+    for bm in _BM_CANDIDATES:
+        if bm > _roundup(m, spec.sublane):
+            continue
+        for bk in _BK_CANDIDATES:
+            if bk > _roundup(k, spec.lane):
+                continue
+            if tsm2r_vmem_usage(bm, bk, n, dtype) > budget:
+                continue
+            t = tsm2r_model_time(m, k, n, bm, bk, spec, dtype)
+            if t < best_t - 1e-12 or (abs(t - best_t) < 1e-12 and best and bk > best[1]):
+                best, best_t = (bm, bk), t
+    if best is None:  # tiny problem: single block
+        best = (min(_roundup(m, spec.sublane), 256), min(_roundup(k, spec.lane), 128))
+    return best
+
+
+def choose_params_tsm2l(m: int, k: int, n: int, spec: TPUSpec = V5E,
+                        dtype=jnp.bfloat16) -> int:
+    """Pick block_m (the tcf analogue) for TSM2L."""
+    budget = spec.vmem_bytes * spec.vmem_usable
+    b = bytes_per_elem(dtype)
+    best, best_t = 256, float("inf")
+    for bm in (256, 512, 1024, 2048, 4096, 8192, 16384):
+        if bm > _roundup(m, spec.sublane):
+            continue
+        use = 2 * bm * _roundup(k, 128) * b + _roundup(k, 8) * _roundup(n, 128) * b \
+            + bm * _roundup(n, 128) * (4 + b)
+        if use > budget:
+            continue
+        t = tsm2l_model_time(m, k, n, bm, spec, dtype)
+        if t < best_t:
+            best, best_t = bm, t
+    return best
+
+
+def choose_params_tsmt(m: int, a: int, bdim: int, spec: TPUSpec = V5E,
+                       dtype=jnp.bfloat16) -> tuple[int, int]:
+    """Pick (block_m, block_a) for the transposed kernel."""
+    budget = spec.vmem_bytes * spec.vmem_usable
+    b = bytes_per_elem(dtype)
+    best, best_t = None, float("inf")
+    for bm in _BM_CANDIDATES:
+        if bm > _roundup(m, spec.sublane):
+            continue
+        for ba in (128, 256, 512, 1024):
+            if ba > _roundup(a, spec.lane):
+                continue
+            use = 2 * bm * ba * b + 2 * bm * _roundup(bdim, 128) * b \
+                + ba * _roundup(bdim, 128) * 4
+            if use > budget:
+                continue
+            t = tsmt_model_time(m, a, bdim, bm, ba, spec, dtype)
+            if t < best_t:
+                best, best_t = (bm, ba), t
+    if best is None:
+        best = (min(_roundup(m, spec.sublane), 256), min(_roundup(a, spec.lane), 128))
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Utilization estimates (paper Fig. 7/11 metric, modeled for v5e)
+# ---------------------------------------------------------------------------
+
+def modeled_bandwidth_utilization(m: int, k: int, n: int, bm: int, bk: int,
+                                  spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> float:
+    """Fraction of peak HBM bandwidth the kernel sustains (modeled).
+
+    util = minimal-bytes / (modeled_time * peak_bw): 1.0 means A/B/C each
+    move once at full stream rate -- the paper's definition of success for
+    the memory-bound regime.
+    """
+    b = bytes_per_elem(dtype)
+    min_bytes = (m * k + k * n + m * n) * b
+    t = tsm2r_model_time(m, k, n, bm, bk, spec, dtype)
+    return min(1.0, min_bytes / (t * spec.hbm_bw))
+
+
+def modeled_compute_utilization(m: int, k: int, n: int, bm: int, bk: int,
+                                spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> float:
+    flops = 2.0 * m * k * n
+    t = tsm2r_model_time(m, k, n, bm, bk, spec, dtype)
+    return min(1.0, flops / (t * spec.peak_flops(dtype)))

@@ -1,0 +1,74 @@
+"""Shape-dispatched tall-and-skinny matmul: the framework's public GEMM entry.
+
+``tsmm(a, b)`` inspects shapes against the perf model (paper Section 3.1.8's
+bound classifier) and routes to:
+
+* TSM2R  when m ~ k >> n (skinny right operand, memory-bound stream of A),
+* TSM2L  when m >> k ~ n (tiny contraction, latency-regime),
+* XLA ``dot_general`` otherwise (regular shapes belong on the stock MXU
+  path -- the paper's observation that cuBLAS already wins there).
+
+``tsmm_t(x, y)`` is the transposed entry (X^T Y over a huge m).
+
+Dispatch is static (shapes are trace-time constants under jit), so choosing
+a path never introduces control flow into the compiled graph.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import perf_model
+from repro.kernels import ops
+
+# A dim is "skinny" when this much smaller than its partner.
+SKINNY_RATIO = 16
+# Largest skinny dim we route to the custom kernels (past this the MXU
+# path's compute-bound efficiency beats the streaming formulation).
+MAX_SKINNY = 256
+# Smallest tall dim worth a custom kernel launch.
+MIN_TALL = 2048
+
+
+def classify_gemm(m: int, k: int, n: int) -> str:
+    """Return one of 'tsm2r' | 'tsm2l' | 'tsmt_hint' | 'dense'."""
+    if m >= MIN_TALL and n <= MAX_SKINNY and m >= SKINNY_RATIO * n:
+        if k <= MAX_SKINNY:          # m >> k ~ n: tiny contraction
+            return "tsm2l"
+        if k >= SKINNY_RATIO * n:    # m ~ k >> n
+            return "tsm2r"
+    return "dense"
+
+
+def tsmm(a: jnp.ndarray, b: jnp.ndarray, *, interpret: bool | None = None,
+         force: str | None = None) -> jnp.ndarray:
+    """A[m,k] @ B[k,n] via the best path for the shape."""
+    m, k = a.shape
+    n = b.shape[1]
+    kind = force or classify_gemm(m, k, n)
+    if kind == "tsm2r":
+        return ops.tsm2r(a, b, interpret=interpret)
+    if kind == "tsm2l":
+        return ops.tsm2l(a, b, interpret=interpret)
+    return lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                           preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def tsmm_t(x: jnp.ndarray, y: jnp.ndarray, *, interpret: bool | None = None,
+           force: str | None = None) -> jnp.ndarray:
+    """X[m,a]^T @ Y[m,b] via TSMT when m is huge and a, b small-ish."""
+    m, a_dim = x.shape
+    b_dim = y.shape[1]
+    use_kernel = force == "tsmt" or (
+        force is None and m >= MIN_TALL and b_dim <= 512
+        and m >= SKINNY_RATIO * max(a_dim, b_dim) // 4
+    )
+    if use_kernel:
+        return ops.tsmt(x, y, interpret=interpret)
+    return lax.dot_general(x, y, (((0,), (0,)), ((), ())),
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def bound_class(m: int, k: int, n: int, dtype=jnp.bfloat16) -> perf_model.Bound:
+    return perf_model.classify(m, k, n, perf_model.V5E, dtype)

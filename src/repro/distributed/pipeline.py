@@ -1,0 +1,88 @@
+"""Pipeline parallelism: a GPipe schedule expressed as a single pjit program.
+
+For >4-pod scaling the layer stack splits into S stages whose parameters
+shard over a mesh axis (leading stage dim); microbatches flow through a
+rotating activation buffer. Each schedule tick runs every stage in parallel
+(``vmap`` over the stage dim => per-stage compute lands on that stage's
+shard) and rotates the buffer one stage forward -- under GSPMD the rotation
+of a stage-sharded buffer lowers to a ``collective-permute`` between
+neighboring shards, exactly the point-to-point a hand-written pipeline
+would issue.
+
+Schedule: plain GPipe, M microbatches over S stages in M + S - 1 ticks
+(bubble fraction (S-1)/(M+S-1)); outputs collect as microbatches drain.
+
+This module is deliberately self-contained (works on any mesh axis or none
+at all -- on one device it degenerates to a correct sequential schedule,
+which is what tests/test_pipeline.py verifies against).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import maybe_wsc
+
+
+def pipeline_apply(stage_fn, stage_params, microbatches, *,
+                   stage_axis: str | None = "model"):
+    """Run ``microbatches`` (M, B, ...) through S pipeline stages.
+
+    ``stage_fn(params_s, x) -> x`` is one stage's computation;
+    ``stage_params`` is a pytree stacked on a leading S dim (sharded over
+    ``stage_axis``). Returns (M, B, ...) outputs.
+    """
+    s = jax.tree.leaves(stage_params)[0].shape[0]
+    m = microbatches.shape[0]
+    ticks = m + s - 1
+
+    def pin(x):
+        return maybe_wsc(x, stage_axis) if stage_axis else x
+
+    buf = pin(jnp.zeros((s,) + microbatches.shape[1:], microbatches.dtype))
+
+    def tick(carry, t):
+        buf, outs = carry
+        # feed: microbatch t enters stage 0 (zeros after the last one)
+        feed = lax.dynamic_index_in_dim(
+            microbatches, jnp.minimum(t, m - 1), keepdims=False)
+        feed = jnp.where(t < m, feed, jnp.zeros_like(feed))
+        buf = buf.at[0].set(feed)
+        # all stages compute in parallel on their resident microbatch
+        buf = pin(jax.vmap(stage_fn)(stage_params, buf))
+        # drain: stage S-1's result is microbatch t-(S-1)'s output
+        out_idx = t - (s - 1)
+        outs = lax.cond(
+            out_idx >= 0,
+            lambda o: lax.dynamic_update_index_in_dim(
+                o, buf[s - 1], jnp.maximum(out_idx, 0), 0),
+            lambda o: o, outs)
+        # rotate one stage forward (collective-permute when sharded)
+        buf = pin(jnp.roll(buf, 1, axis=0))
+        return (buf, outs), None
+
+    outs0 = jnp.zeros_like(microbatches)
+    (_, outs), _ = lax.scan(tick, (buf, outs0), jnp.arange(ticks))
+    return outs
+
+
+def split_stages(layer_params, n_stages: int):
+    """Reshape (L, ...) stacked layer params into (S, L/S, ...)."""
+    def one(x):
+        l = x.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return x.reshape(n_stages, l // n_stages, *x.shape[1:])
+    return jax.tree.map(one, layer_params)
+
+
+def make_stage_fn(layer_fn):
+    """Wrap a per-layer fn into a per-stage fn (scan over the stage's
+    layers)."""
+    def stage_fn(params_stage, x):
+        def body(h, lp):
+            return layer_fn(lp, h), None
+        out, _ = lax.scan(body, x, params_stage)
+        return out
+    return stage_fn

@@ -1,0 +1,76 @@
+"""ABFT (algorithm-based fault tolerance) checksums via the TSM2X kernels.
+
+This is the paper's own headline application [refs 10-20 in the paper]:
+checksum encoding multiplies the protected matrix by a skinny weight
+matrix -- a tall-and-skinny GEMM. We protect optimizer/parameter state
+against silent data corruption (SDC):
+
+    encode:  c = W^T e          e: (d1, s) skinny checksum weights
+    verify:  c' = W'^T e ; SDC detected iff ||c' - c|| > tol
+
+Both encode and verify are the TSMT kernel shape (reduction over the huge
+matrix dim, s in {2..8} output columns). Weighted checksums (e columns:
+ones + ramp) localize single-fault rows, as in classic Huang-Abraham
+schemes.
+
+Cost: one TSMT pass over the params -- at the HBM-roofline that is
+params_bytes / 819 GB/s per verification (e.g. 8 ms for a 3B model across
+a pod), cheap enough to run at checkpoint boundaries.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tsmm
+
+
+def _checksum_weights(d1: int, s: int = 2) -> jnp.ndarray:
+    """Huang-Abraham style: [1, i, i^2/d, ...] columns, f32."""
+    i = jnp.arange(d1, dtype=jnp.float32)
+    cols = [jnp.ones((d1,), jnp.float32), (i + 1.0) / d1]
+    while len(cols) < s:
+        cols.append(jnp.square(cols[-1]))
+    return jnp.stack(cols[:s], axis=1)
+
+
+def encode_leaf(x, s: int = 2, *, interpret=None):
+    """Checksum of one 2-D (or reshaped) array: (cols, s) f32."""
+    m = x.reshape(x.shape[0], -1) if x.ndim != 2 else x
+    if m.ndim == 1:
+        m = m[:, None]
+    e = _checksum_weights(m.shape[0], s)
+    # c[s_, cols] via TSMT: e^T m  -> orient as tsmm_t(m_as_x? ...): we use
+    # tsmm_t(e_like? ) -- X^T Y with X=m (m rows huge) gives (cols, s):
+    return tsmm.tsmm_t(m.astype(jnp.float32), e, interpret=interpret)
+
+
+def encode_tree(tree, s: int = 2, *, interpret=None):
+    """Checksums for every leaf with >= 2 dims and >= 2^16 elements."""
+    def one(x):
+        if x.ndim < 1 or x.size < 65536:
+            return None
+        return encode_leaf(x, s, interpret=interpret)
+    return jax.tree.map(one, tree)
+
+
+def verify_tree(tree, checksums, *, rtol: float = 1e-3, interpret=None):
+    """Returns (ok: bool array, per-leaf max relative deviation tree)."""
+    devs = []
+
+    def one(x, c):
+        if c is None:
+            return None
+        c2 = encode_leaf(x, c.shape[1], interpret=interpret)
+        denom = jnp.maximum(jnp.abs(c), 1e-6)
+        dev = jnp.max(jnp.abs(c2 - c) / denom)
+        devs.append(dev)
+        return dev
+
+    dev_tree = jax.tree.map(one, tree, checksums,
+                            is_leaf=lambda x: x is None)
+    if not devs:
+        return jnp.bool_(True), dev_tree
+    worst = jnp.stack(devs).max()
+    return worst <= rtol, dev_tree

@@ -1,0 +1,77 @@
+"""Straggler / hang mitigation for the synchronous SPMD training loop.
+
+In a synchronous pjit world a slow or dead host stalls everyone; what a
+launcher CAN do is (a) notice, fast, (b) checkpoint proactively when step
+times degrade (a straggler often precedes a failure), (c) kill + relaunch
+elastically (ft/elastic.py). The watchdog implements (a) and (b):
+
+* EWMA step-time tracking with a deviation threshold => ``straggler``
+  signal (telemetry + proactive checkpoint callback);
+* a hard wall-clock hang deadline on each step => ``hang`` callback
+  (launcher responds by re-forming the job, possibly minus a pod).
+
+Preemption: SIGTERM flips a flag the training loop checks at step
+boundaries -- the loop checkpoints and exits cleanly (tested by sending
+the signal in-process).
+"""
+
+from __future__ import annotations
+
+import signal
+import threading
+import time
+
+
+class StepWatchdog:
+    def __init__(self, *, ewma_alpha: float = 0.1, straggler_factor: float = 2.0,
+                 hang_timeout_s: float = 1800.0, on_straggler=None, on_hang=None):
+        self.alpha = ewma_alpha
+        self.factor = straggler_factor
+        self.hang_timeout = hang_timeout_s
+        self.on_straggler = on_straggler
+        self.on_hang = on_hang
+        self.ewma = None
+        self.straggler_events = 0
+        self._timer = None
+        self._t0 = None
+
+    def step_begin(self):
+        self._t0 = time.monotonic()
+        if self.on_hang:
+            self._timer = threading.Timer(self.hang_timeout, self.on_hang)
+            self._timer.daemon = True
+            self._timer.start()
+
+    def step_end(self) -> dict:
+        dt = time.monotonic() - self._t0
+        if self._timer:
+            self._timer.cancel()
+        is_straggler = self.ewma is not None and dt > self.factor * self.ewma
+        if is_straggler:
+            self.straggler_events += 1
+            if self.on_straggler:
+                self.on_straggler(dt, self.ewma)
+        # stragglers don't poison the EWMA
+        if self.ewma is None:
+            self.ewma = dt
+        elif not is_straggler:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return {"step_time_s": dt, "step_time_ewma_s": self.ewma,
+                "straggler": is_straggler}
+
+
+class PreemptionHandler:
+    """SIGTERM/SIGINT -> graceful stop flag for the training loop."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.requested = False
+        self._prev = {}
+        for s in signals:
+            self._prev[s] = signal.signal(s, self._handle)
+
+    def _handle(self, signum, frame):
+        self.requested = True
+
+    def restore(self):
+        for s, h in self._prev.items():
+            signal.signal(s, h)

@@ -1,0 +1,102 @@
+"""Public jit'd entry points for the TSM2X kernels.
+
+Handles: block-size selection (perf model), padding to block multiples
+(zero-padding is exact for GEMM), interpret-mode auto-detection (CPU runs
+the kernel bodies in Python for correctness; TPU compiles via Mosaic), and
+lane-dim padding of skinny minor dims when lowering for real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import perf_model
+from repro.kernels import ref
+from repro.kernels.tsm2l import tsm2l_pallas
+from repro.kernels.tsm2r import tsm2r_pallas
+from repro.kernels.tsmt import tsmt_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def tsm2r(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
+          block_k: int | None = None, spec: perf_model.TPUSpec = perf_model.V5E,
+          interpret: bool | None = None) -> jnp.ndarray:
+    """C[m,n] = A[m,k] @ B[k,n], m ~ k >> n. Paper's TSM2R."""
+    m, k = a.shape
+    n = b.shape[1]
+    if interpret is None:
+        interpret = _auto_interpret()
+    if block_m is None or block_k is None:
+        bm, bk = perf_model.choose_params_tsm2r(m, k, n, spec, a.dtype)
+        block_m = block_m or bm
+        block_k = block_k or bk
+    block_m = min(block_m, _ceil_mult(m, 8))
+    block_k = min(block_k, _ceil_mult(k, 8))
+    a_p = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
+    b_p = _pad_to(b, 0, block_k)
+    out = tsm2r_pallas(a_p, b_p, block_m=block_m, block_k=block_k,
+                       interpret=interpret)
+    return out[:m]
+
+
+def tsm2l(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
+          spec: perf_model.TPUSpec = perf_model.V5E,
+          interpret: bool | None = None) -> jnp.ndarray:
+    """C[m,n] = A[m,k] @ B[k,n], m >> k ~ n. Paper's TSM2L."""
+    m, k = a.shape
+    n = b.shape[1]
+    if interpret is None:
+        interpret = _auto_interpret()
+    if block_m is None:
+        block_m = perf_model.choose_params_tsm2l(m, k, n, spec, a.dtype)
+    block_m = min(block_m, _ceil_mult(m, 8))
+    a_p = _pad_to(a, 0, block_m)
+    out = tsm2l_pallas(a_p, b, block_m=block_m, interpret=interpret)
+    return out[:m]
+
+
+def tsmt(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int | None = None,
+         block_a: int | None = None, spec: perf_model.TPUSpec = perf_model.V5E,
+         interpret: bool | None = None) -> jnp.ndarray:
+    """C[a,b] = X[m,a]^T @ Y[m,b], m >> a, b. TSMTTSM-style extension."""
+    m, a_dim = x.shape
+    b_dim = y.shape[1]
+    if interpret is None:
+        interpret = _auto_interpret()
+    if block_m is None or block_a is None:
+        bm, ba = perf_model.choose_params_tsmt(m, a_dim, b_dim, spec, x.dtype)
+        block_m = block_m or bm
+        block_a = block_a or ba
+    block_m = min(block_m, _ceil_mult(m, 8))
+    block_a = min(block_a, _ceil_mult(a_dim, 8))
+    x_p = _pad_to(_pad_to(x, 0, block_m), 1, block_a)
+    y_p = _pad_to(y, 0, block_m)
+    out = tsmt_pallas(x_p, y_p, block_m=block_m, block_a=block_a,
+                      interpret=interpret)
+    return out[:a_dim]
+
+
+def _ceil_mult(x: int, q: int) -> int:
+    return ((x + q - 1) // q) * q
+
+
+# Re-exported oracles so callers can A/B against the pure-jnp path.
+tsm2r_ref = ref.tsm2r_ref
+tsm2l_ref = ref.tsm2l_ref
+tsmt_ref = ref.tsmt_ref

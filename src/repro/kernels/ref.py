@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the TSM2X kernels.
+
+These are the ground truth every Pallas kernel is validated against
+(``tests/test_kernels_*.py`` sweep shapes/dtypes with ``assert_allclose``).
+
+We also keep jnp re-statements of the paper's optimization ladder (V0..V3,
+paper Section 4.2.1) so the ablation benchmark can show *why* the final
+kernel is shaped the way it is:
+
+* V0 — inner product: each output element is an independent k-reduction
+  (the paper's Algorithm 1; maximal re-loading of A in the GPU cost model).
+* V1 — outer product: rank-1 update accumulation (Algorithm 2; A touched
+  once per (m-row, k) element).
+* V2/V3 — staging + prefetch have no pure-jnp distinction (XLA fuses), so
+  the ladder continues inside the Pallas kernel (scratch accumulator =
+  staging; grid pipelining = prefetch).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def tsm2r_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C[m,n] = A[m,k] @ B[k,n] with f32 accumulation. m ~ k >> n."""
+    return lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(a.dtype)
+
+
+def tsm2l_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C[m,n] = A[m,k] @ B[k,n] with f32 accumulation. m >> k ~ n."""
+    return tsm2r_ref(a, b)
+
+
+def tsmt_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """C[a,b] = X[m,a]^T @ Y[m,b] with f32 accumulation. m >> a, b.
+
+    The TSMTTSM-style case (Ernst et al.) the paper cites as uncovered;
+    needed by PowerSGD's second projection and ABFT verification.
+    """
+    return lax.dot_general(
+        x, y, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paper optimization-ladder restatements (for benchmarks/bench_ablation.py)
+# ---------------------------------------------------------------------------
+
+def tsm2r_v0_inner(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 1 (inner product): n independent matrix-vector products.
+
+    This is the shape of the cuBLAS-workaround the paper criticises
+    (disassemble the skinny matrix into vectors, do n GEMVs).
+    """
+    cols = [
+        lax.dot_general(a, b[:, i], (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+        for i in range(b.shape[1])
+    ]
+    return jnp.stack(cols, axis=1).astype(a.dtype)
+
+
+def tsm2r_v1_outer(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 2 (outer product): scan of rank-1 updates over k.
+
+    Each element of A participates exactly once, mirroring the paper's
+    register-resident accumulation.
+    """
+    m, k = a.shape
+    n = b.shape[1]
+
+    def step(acc, ab):
+        a_col, b_row = ab
+        return acc + a_col[:, None].astype(jnp.float32) * b_row[None, :].astype(jnp.float32), None
+
+    acc0 = jnp.zeros((m, n), jnp.float32)
+    acc, _ = lax.scan(step, acc0, (a.T, b))
+    return acc.astype(a.dtype)

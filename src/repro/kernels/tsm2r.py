@@ -1,0 +1,79 @@
+"""TSM2R Pallas kernel: C[m,n] = A[m,k] @ B[k,n] with m ~ k >> n.
+
+TPU-native restatement of paper Algorithm 4 (outer product + shared-memory
+staging + data prefetch):
+
+* Grid ``(m/bm, k/bk)`` with ``dimension_semantics=("parallel", "arbitrary")``:
+  the k axis is the innermost sequential reduction, so Mosaic double-buffers
+  the next (bm, bk) A window and (bk, n) B window while the MXU consumes the
+  current ones -- exactly the nextA/nextB register prefetch of Algorithm 4,
+  done by the pipeliner instead of by hand.
+* A f32 accumulator lives in VMEM scratch across the k steps of one m-row of
+  the grid (the paper's register-resident C_{1:t2}); it is zeroed on the
+  first k step and flushed to the output window on the last. Consequence:
+  **A is streamed from HBM exactly once** (Algorithm 2's outer-product
+  guarantee).
+* B's (bk, n) window is re-fetched once per m-block -- the analogue of the
+  paper's ``n/t1`` B-reload factor; with k*n tiny this is noise (it is the
+  term the paper also drops, Section 3.1.8 "minor inaccuracy").
+* The shared-memory bank-conflict analysis (paper Section 3.1.4) has no TPU
+  analogue; the corresponding layout decision here is lane-dim padding of n
+  to 128 (done by ``ops.tsm2r`` when lowering for real TPUs).
+
+Block sizes (bm, bk) come from ``repro.core.perf_model.choose_params_tsm2r``,
+the discrete Algorithm-5 analogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tsm2r_kernel(a_ref, b_ref, o_ref, acc_ref):
+    """One grid cell: acc[bm, n] += A[bm, bk] @ B[bk, n]."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def tsm2r_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int, block_k: int,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Raw pallas_call; requires m % block_m == 0 and k % block_k == 0.
+
+    Use ``repro.kernels.ops.tsm2r`` for the padded/dispatched public entry.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % block_m == 0 and k % block_k == 0, (m, k, block_m, block_k)
+    grid = (m // block_m, k // block_k)
+
+    return pl.pallas_call(
+        _tsm2r_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_k, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,77 @@
+"""TSMT Pallas kernel: C[a,b] = X[m,a]^T @ Y[m,b] with m >> a, b.
+
+Beyond-paper extension: the transposed tall-and-skinny case ("TSMTTSM",
+Ernst et al. [38]) which the paper explicitly leaves uncovered. The
+framework needs it for:
+
+* PowerSGD's second projection  Q = G^T P  (G: huge gradient matrix,
+  P: m x r with r in {2..16});
+* ABFT checksum *verification*  s = G^T e  against the encoded checksum.
+
+Shape character: the reduction axis is the huge one (m), both output dims
+are small. The TPU formulation:
+
+* Grid ``(a/ba, m/bm)`` with the m axis innermost-sequential
+  (``dimension_semantics=("parallel", "arbitrary")``): a (ba x b) f32
+  accumulator in VMEM survives the m sweep; X and Y windows stream through
+  double-buffered VMEM exactly once per a-block.
+* The second output dim (b) must be small (<= ~512): it stays unblocked so
+  the accumulator is a single VMEM tile. Callers orient their operands so
+  the large output dim is first (ops.tsmt handles this).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tsmt_kernel(x_ref, y_ref, o_ref, acc_ref):
+    """One grid cell: acc[ba, b] += X[bm, ba]^T @ Y[bm, b]."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], y_ref[...],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_a", "interpret"))
+def tsmt_pallas(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int, block_a: int,
+                interpret: bool = False) -> jnp.ndarray:
+    """Raw pallas_call; requires m % block_m == 0 and a % block_a == 0.
+
+    Use ``repro.kernels.ops.tsmt`` for the padded/dispatched public entry.
+    """
+    m, a = x.shape
+    m2, b = y.shape
+    assert m == m2, (x.shape, y.shape)
+    assert m % block_m == 0 and a % block_a == 0, (m, a, block_m, block_a)
+    grid = (a // block_a, m // block_m)
+
+    return pl.pallas_call(
+        _tsmt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_a), lambda i, j: (j, i)),
+            pl.BlockSpec((block_m, b), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_a, b), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a, b), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_a, b), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,330 @@
+"""Attention: chunked online-softmax (flash-style in pure JAX), GQA, SWA,
+MLA (DeepSeek latent attention), cross-attention, and decode paths.
+
+Why chunked: materializing (B, H, S, S) scores at S=32k would need ~17 GB
+per device; the two-level chunk scan keeps the live score tile at
+(q_chunk x kv_chunk) with exact online-softmax accumulation (f32 stats).
+
+Causality at chunk granularity: fully-masked chunk pairs are still
+computed and zeroed (static grid). This ~2x waste on causal prefill is the
+*paper-faithful baseline*; the §Perf hillclimb evaluates block-skipping.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core chunked attention
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                      q_offset=0, kv_valid_len=None,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      softmax_scale: float | None = None):
+    """q: (B, Sq, H, D); k, v: (B, Skv, Hk, Dk/Dv); H % Hk == 0.
+
+    ``q_offset``: global position of q[0] (prefill continuation / decode).
+    ``kv_valid_len``: mask out cache slots >= this (scalar or (B,)).
+    Supports Dk != Dv (MLA attends with 192-dim keys, 128-dim values).
+    """
+    b, sq, h, dk = q.shape
+    _, skv, hk, _ = k.shape
+    dv = v.shape[-1]
+    g = h // hk
+    scale = softmax_scale if softmax_scale is not None else dk ** -0.5
+
+    # Pad sequences to chunk multiples rather than shrinking the chunk: a
+    # divisor-shrink fallback degenerates to chunk=1 on prime lengths
+    # (vision_seq=1601 produced a 1601-step kv scan per cross-attn layer —
+    # caught by the roofline table, EXPERIMENTS.md §Perf).
+    if kv_valid_len is None:
+        kv_valid = jnp.full((b,), skv, jnp.int32)
+    else:
+        kv_valid = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32), (b,))
+
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    sq_pad = -(-sq // qc) * qc
+    skv_pad = -(-skv // kc) * kc
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+    if skv_pad != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+        kv_valid = jnp.minimum(kv_valid, skv)   # padded slots masked out
+    nq, nk = sq_pad // qc, skv_pad // kc
+
+    qs = q.reshape(b, nq, qc, hk, g, dk)
+    ks = k.reshape(b, nk, kc, hk, dk)
+    vs = v.reshape(b, nk, kc, hk, dv)
+
+    def q_step(_, qi_and_chunk):
+        qi, q_blk = qi_and_chunk                      # q_blk: (b, qc, hk, g, dk)
+        q_pos = q_offset + qi * qc + jnp.arange(qc)   # (qc,)
+
+        # NB: kv_step is remat'd (see lax.scan below). Without it, the
+        # backward saves every f32 score/probability tile stacked over both
+        # scan levels -- the full S^2 attention backward (~28 GiB/device at
+        # train_4k, measured) that chunking exists to avoid. With remat,
+        # only the (m, l, acc) carries are saved and tiles are recomputed.
+        def kv_step(carry, ki_and_blk):
+            m_run, l_run, acc = carry
+            ki, k_blk, v_blk = ki_and_blk
+            kv_pos = ki * kc + jnp.arange(kc)         # (kc,)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
+                jnp.ones((qc, kc), bool)
+            if window is not None:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            mask = mask[None] & (kv_pos[None, None, :] < kv_valid[:, None, None])
+            mask = mask[:, None, None]                # (b,1,1,qc,kc)
+            s = jnp.where(mask, s, _NEG)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None]) * mask  # zero fully-masked rows
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hk, g, qc), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, qc, dv), jnp.float32)
+        (m_f, l_f, acc_f), _ = lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0)))
+        out = acc_f / jnp.maximum(l_f, 1e-30)[..., None]   # (b,hk,g,qc,dv)
+        return None, jnp.einsum("bhgqd->bqhgd", out)
+
+    _, outs = lax.scan(q_step, None, (jnp.arange(nq), jnp.moveaxis(qs, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq_pad, h, dv)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window: int | None = None,
+                     softmax_scale: float | None = None):
+    """Single-step decode: q (B, 1, H, D) against a (B, S, Hk, D) cache.
+
+    ``cur_len``: number of valid cache slots per batch element (the new
+    token's own k/v must already be written at cur_len - 1).
+    """
+    b, _, h, dk = q.shape
+    _, s, hk, _ = k_cache.shape
+    g = h // hk
+    scale = softmax_scale if softmax_scale is not None else dk ** -0.5
+    qh = q.reshape(b, hk, g, dk)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qh.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    mask = pos[None, :] < lens[:, None]
+    if window is not None:
+        mask &= pos[None, :] >= lens[:, None] - window
+    scores = jnp.where(mask[:, None, None, :], scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention module
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             *, qkv_bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": layers.dense_init(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": layers.dense_init(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": layers.dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def gqa_project_qkv(params, x, positions, *, n_heads, n_kv, head_dim,
+                    rope_theta=10000.0, rope_fraction=1.0):
+    b, s, _ = x.shape
+    q = layers.dense(params["wq"], x)
+    k = layers.dense(params["wk"], x)
+    v = layers.dense(params["wv"], x)
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv, head_dim)
+    v = v.reshape(b, s, n_kv, head_dim)
+    if rope_fraction > 0:
+        q = layers.apply_rope(q, positions, theta=rope_theta, fraction=rope_fraction)
+        k = layers.apply_rope(k, positions, theta=rope_theta, fraction=rope_fraction)
+    return q, k, v
+
+
+def gqa_fwd(params, x, *, n_heads, n_kv, head_dim, causal=True,
+            window=None, rope_theta=10000.0, rope_fraction=1.0,
+            q_chunk=1024, kv_chunk=1024, positions=None,
+            kv_override=None):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v)).
+
+    ``kv_override``: (k, v) to attend over instead of self-projections
+    (cross-attention passes pre-projected image keys/values).
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = gqa_project_qkv(params, x, positions, n_heads=n_heads, n_kv=n_kv,
+                              head_dim=head_dim, rope_theta=rope_theta,
+                              rope_fraction=rope_fraction)
+    if kv_override is not None:
+        k, v = kv_override
+    ctx = chunked_attention(q, k, v, causal=causal, window=window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = layers.dense(params["wo"], ctx.reshape(b, s, n_heads * head_dim))
+    return out, (k, v)
+
+
+def gqa_decode(params, x, cache_k, cache_v, pos, *, n_heads, n_kv, head_dim,
+               window=None, rope_theta=10000.0, rope_fraction=1.0,
+               ring_window: int | None = None):
+    """One-token decode. x: (B, 1, d). pos: scalar current position.
+
+    Writes the new k/v at slot ``pos`` (or ``pos % ring_window`` for SWA
+    ring caches) and attends over valid slots. Returns (out, cache_k, cache_v).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = gqa_project_qkv(params, x, positions, n_heads=n_heads, n_kv=n_kv,
+                              head_dim=head_dim, rope_theta=rope_theta,
+                              rope_fraction=rope_fraction)
+    slot = pos if ring_window is None else pos % ring_window
+    cache_k = lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    if ring_window is None:
+        ctx = decode_attention(q, cache_k, cache_v, pos + 1, window=window)
+    else:
+        # Ring cache: all slots <= min(pos+1, ring) are valid; positions wrap,
+        # and softmax is permutation-invariant so slot order is irrelevant.
+        valid = jnp.minimum(pos + 1, ring_window)
+        ctx = decode_attention(q, cache_k, cache_v, valid)
+    out = layers.dense(params["wo"], ctx.reshape(b, 1, n_heads * head_dim))
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, d_model: int, n_heads: int, *, q_lora: int, kv_lora: int,
+             nope_dim: int, rope_dim: int, v_dim: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return {
+        "wdq": layers.dense_init(ks[0], d_model, q_lora, dtype),
+        "q_norm": layers.rmsnorm_init(q_lora, dtype),
+        "wuq": layers.dense_init(ks[1], q_lora, n_heads * (nope_dim + rope_dim), dtype),
+        "wdkv": layers.dense_init(ks[2], d_model, kv_lora, dtype),
+        "kv_norm": layers.rmsnorm_init(kv_lora, dtype),
+        "wukv": layers.dense_init(ks[3], kv_lora, n_heads * (nope_dim + v_dim), dtype),
+        "wkr": layers.dense_init(ks[4], d_model, rope_dim, dtype),
+        "wo": layers.dense_init(ks[5], n_heads * v_dim, d_model, dtype),
+    }
+
+
+def _mla_q(params, x, positions, *, n_heads, nope_dim, rope_dim, rope_theta):
+    b, s, _ = x.shape
+    cq = layers.rmsnorm(params["q_norm"], layers.dense(params["wdq"], x))
+    q = layers.dense(params["wuq"], cq).reshape(b, s, n_heads, nope_dim + rope_dim)
+    q_nope, q_pe = q[..., :nope_dim], q[..., nope_dim:]
+    q_pe = layers.apply_rope(q_pe, positions, theta=rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_latent(params, x, positions, *, rope_theta):
+    c = layers.rmsnorm(params["kv_norm"], layers.dense(params["wdkv"], x))
+    k_pe = layers.dense(params["wkr"], x)[:, :, None, :]      # (b,s,1,rope)
+    k_pe = layers.apply_rope(k_pe, positions, theta=rope_theta)
+    return c, k_pe
+
+
+def mla_fwd(params, x, *, n_heads, nope_dim, rope_dim, v_dim,
+            rope_theta=10000.0, causal=True, q_chunk=1024, kv_chunk=1024,
+            positions=None):
+    """Full-sequence MLA. Returns (out, (c_latent, k_pe)) -- the latent cache."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_pe = _mla_q(params, x, positions, n_heads=n_heads,
+                          nope_dim=nope_dim, rope_dim=rope_dim,
+                          rope_theta=rope_theta)
+    c, k_pe = _mla_latent(params, x, positions, rope_theta=rope_theta)
+    kv = layers.dense(params["wukv"], c).reshape(b, s, n_heads, nope_dim + v_dim)
+    k_nope, v = kv[..., :nope_dim], kv[..., nope_dim:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (*k_pe.shape[:2], n_heads, rope_dim))], -1)
+    q = jnp.concatenate([q_nope, q_pe], -1)
+    scale = (nope_dim + rope_dim) ** -0.5
+    ctx = chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk, softmax_scale=scale)
+    out = layers.dense(params["wo"], ctx.reshape(b, s, n_heads * v_dim))
+    return out, (c, k_pe[:, :, 0, :])
+
+
+def mla_decode(params, x, cache_c, cache_kpe, pos, *, n_heads, nope_dim,
+               rope_dim, v_dim, rope_theta=10000.0, absorb: bool = True):
+    """One-token MLA decode over the latent cache.
+
+    ``absorb=True`` (beyond-paper optimization, recorded in §Perf): fold
+    W_uk into the query and W_uv into the output so attention runs directly
+    in the 512-dim latent space -- O(S * kv_lora) per step instead of
+    re-expanding the whole cache to per-head k/v (O(S * H * (nope+v))).
+    """
+    b = x.shape[0]
+    kv_lora = cache_c.shape[-1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_pe = _mla_q(params, x, positions, n_heads=n_heads,
+                          nope_dim=nope_dim, rope_dim=rope_dim,
+                          rope_theta=rope_theta)
+    c_new, kpe_new = _mla_latent(params, x, positions, rope_theta=rope_theta)
+    cache_c = lax.dynamic_update_slice_in_dim(cache_c, c_new, pos, axis=1)
+    cache_kpe = lax.dynamic_update_slice_in_dim(cache_kpe, kpe_new[:, :, 0, :], pos, axis=1)
+    scale = (nope_dim + rope_dim) ** -0.5
+    s_len = cache_c.shape[1]
+    wukv = params["wukv"].reshape(kv_lora, n_heads, nope_dim + v_dim)
+    wuk, wuv = wukv[..., :nope_dim], wukv[..., nope_dim:]
+
+    if absorb:
+        # q_c[b,h,l] = sum_d q_nope[b,h,d] * wuk[l,h,d]
+        q_c = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
+                         wuk.astype(jnp.float32))
+        s_nope = jnp.einsum("bhl,bsl->bhs", q_c, cache_c.astype(jnp.float32))
+        s_pe = jnp.einsum("bhd,bsd->bhs", q_pe[:, 0].astype(jnp.float32),
+                          cache_kpe.astype(jnp.float32))
+        scores = (s_nope + s_pe) * scale
+        mask = jnp.arange(s_len)[None, None, :] <= pos
+        scores = jnp.where(mask, scores, _NEG)
+        p = jax.nn.softmax(scores, axis=-1)
+        ctx_c = jnp.einsum("bhs,bsl->bhl", p, cache_c.astype(jnp.float32))
+        ctx = jnp.einsum("bhl,lhd->bhd", ctx_c, wuv.astype(jnp.float32))
+    else:
+        kv = jnp.einsum("bsl,lhd->bshd", cache_c.astype(jnp.float32),
+                        wukv.astype(jnp.float32))
+        k_nope, v = kv[..., :nope_dim], kv[..., nope_dim:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(cache_kpe[:, :, None, :].astype(jnp.float32),
+                                      (*cache_kpe.shape[:2], n_heads, rope_dim))], -1)
+        q = jnp.concatenate([q_nope, q_pe], -1)
+        ctx = decode_attention(q, k.astype(x.dtype), v.astype(x.dtype), pos + 1,
+                               softmax_scale=scale)[:, 0]
+    out = layers.dense(params["wo"],
+                       ctx.reshape(b, 1, n_heads * v_dim).astype(x.dtype))
+    return out, cache_c, cache_kpe

@@ -1,0 +1,191 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings.
+
+Pure-functional style: ``init_*`` returns a params pytree (nested dict of
+arrays); ``*_fwd`` applies it. All matmul accumulation is f32
+(``preferred_element_type``); norms run in f32 regardless of activation
+dtype. Weight layout convention: ``w[in_dim, out_dim]`` so activations hit
+the MXU without transposes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+import os
+
+# Hillclimb lever (EXPERIMENTS.md §Perf): emit parameter gradients in the
+# parameter dtype instead of f32. The default VJP of an f32-accumulating
+# dot produces f32 cotangents, doubling per-device gradient memory under
+# pure-DP/ZeRO-1 (12.8 GiB -> 6.4 GiB for a 3B model). Accumulation inside
+# each dot stays f32 either way.
+_PARAM_DTYPE_GRADS = os.environ.get("REPRO_BF16_PARAM_GRADS", "0") == "1"
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def _dense_raw(w, x):
+    return lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+@jax.custom_vjp
+def _dense_pg(w, x):
+    return _dense_raw(w, x)
+
+
+def _dense_pg_fwd(w, x):
+    return _dense_raw(w, x), (w, x)
+
+
+def _dense_pg_bwd(res, dy):
+    w, x = res
+    x2 = x.reshape(-1, x.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    dw = lax.dot_general(x2, dy2, (((0,), (0,)), ((), ())),
+                         preferred_element_type=jnp.float32).astype(w.dtype)
+    dx = lax.dot_general(dy, w, (((dy.ndim - 1,), (1,)), ((), ())),
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    return dw, dx
+
+
+_dense_pg.defvjp(_dense_pg_fwd, _dense_pg_bwd)
+
+
+def dense(w, x):
+    return _dense_pg(w, x) if _PARAM_DTYPE_GRADS else _dense_raw(w, x)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, jnp.float32) / rot)), rot
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0, fraction: float = 1.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S).
+
+    ``fraction < 1`` rotates only the leading slice of D (ChatGLM-style
+    partial / '2d' RoPE); the remainder passes through unrotated.
+    """
+    d = x.shape[-1]
+    inv_freq, rot = rope_freqs(d, fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, rot/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., : rot // 2], x_rot[..., rot // 2:]
+    r1 = (x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin)
+    r2 = (x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin)
+    return jnp.concatenate(
+        [r1.astype(x.dtype), r2.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params, x):
+    g = dense(params["w_gate"], x)
+    u = dense(params["w_up"], x)
+    return dense(params["w_down"], jax.nn.silu(g) * u)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    h = dense(params["w_up"], x) + params["b_up"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return dense(params["w_down"], h) + params["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d_model: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                      * d_model ** -0.5).astype(dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Logits in f32 (loss stability); table may be the tied embedding."""
+    return lax.dot_general(
+        x, params["table"], (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def lora_init(key, d_in: int, d_out: int, rank: int, dtype):
+    """Low-rank adapter: a tall-and-skinny GEMM pair (TSM2X shapes)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": dense_init(k1, d_in, rank, dtype),
+        "b": jnp.zeros((rank, d_out), dtype),
+    }
+
+
+def lora_apply(params, x, base_out=None):
+    h = dense(params["a"], x)
+    out = dense(params["b"], h)
+    return out if base_out is None else base_out + out

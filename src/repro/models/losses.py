@@ -1,0 +1,93 @@
+"""Losses: masked softmax cross-entropy with optional z-loss.
+
+Logits arrive in f32 (unembed promotes); the logsumexp path is stable for
+vocab up to 152k (qwen2). z-loss (PaLM-style) keeps the partition function
+bounded for bf16 training.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, targets, mask=None, z_loss: float = 0.0):
+    """logits: (..., V) f32; targets: (...) int32; mask broadcastable.
+
+    Sharding note: the gold logit is extracted with an iota-compare masked
+    reduce (not take_along_axis) so a vocab-sharded logits tensor reduces
+    shard-locally under GSPMD instead of being all-gathered.
+
+    Returns (mean_loss, metrics).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    onehot = (vocab_iota == targets[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((logits.argmax(-1) == targets) * mask).sum() / denom
+    return loss, {"loss": loss, "accuracy": acc,
+                  "tokens": mask.sum(), "z": jnp.abs(lse).mean()}
+
+
+def lm_loss(logits, batch, z_loss: float = 0.0):
+    """Next-token loss for LM batches ({'tokens','targets'[,'loss_mask']})."""
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    return softmax_xent(logits, targets, mask, z_loss)
+
+
+def chunked_lm_loss(unembed_fn, hidden, batch, *, chunk: int = 512,
+                    z_loss: float = 0.0):
+    """Sequence-chunked loss: never materializes the full (B, S, V) logits.
+
+    At S=4096, V=128k, B=16/device, f32 logits are ~34 GB/device -- the
+    dominant training-memory term. Scanning the unembed+xent over sequence
+    chunks bounds the live logits tensor to (B, chunk, V_shard):
+    chunk=512 => ~260 MB/device with a 16-way vocab-sharded head.
+
+    ``unembed_fn(x_chunk) -> logits_chunk`` closes over the (sharded) head.
+    """
+    b, s = batch["targets"].shape
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    n = s // c
+    targets = batch["targets"].reshape(b, n, c)
+    mask = batch.get("loss_mask")
+    mask = (jnp.ones((b, s), jnp.float32) if mask is None
+            else mask.astype(jnp.float32)).reshape(b, n, c)
+    hid = hidden.reshape(b, n, c, hidden.shape[-1])
+
+    def body(acc, ix):
+        logits = unembed_fn(hid[:, ix]).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        onehot = iota == targets[:, ix][..., None]
+        gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        nll = lse - gold
+        if z_loss:
+            nll = nll + z_loss * jnp.square(lse)
+        m = mask[:, ix]
+        correct = (logits.argmax(-1) == targets[:, ix]).astype(jnp.float32)
+        return (acc[0] + (nll * m).sum(), acc[1] + (correct * m).sum(),
+                acc[2] + m.sum(), acc[3] + jnp.abs(lse).sum()), None
+
+    # remat: recompute each chunk's logits in the backward instead of
+    # saving n stacked (B, chunk, V_shard) f32 tensors (~4 GiB measured).
+    (nll_sum, acc_sum, tok, z_sum), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (jnp.float32(0), jnp.float32(0), jnp.float32(0), jnp.float32(0)),
+        jnp.arange(n))
+    denom = jnp.maximum(tok, 1.0)
+    loss = nll_sum / denom
+    return loss, {"loss": loss, "accuracy": acc_sum / denom, "tokens": tok,
+                  "z": z_sum / jnp.maximum(b * s, 1)}

@@ -1,0 +1,98 @@
+"""Assemble EXPERIMENTS.md roofline/dry-run tables from dryrun JSONs.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir artifacts/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirpath):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        d = json.load(open(f))
+        cells.append(d)
+    return cells
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def dryrun_table(cells, mesh="both"):
+    rows = ["| arch | shape | mesh | status | compile | mem/dev | fits 16G |",
+            "|---|---|---|---|---|---|---|"]
+    for d in cells:
+        if mesh != "both" and d.get("mesh") != mesh:
+            continue
+        if d.get("status") != "ok":
+            rows.append(f"| {d['arch']} | {d['shape']} | {d.get('mesh', '?')} |"
+                        f" FAILED | | | |")
+            continue
+        mem = d["memory"]
+        memgb = (f"{mem['total_bytes']/2**30:.1f} GiB"
+                 if isinstance(mem, dict) and "total_bytes" in mem else "n/a")
+        fits = mem.get("fits_16gb_hbm", "n/a") if isinstance(mem, dict) else "n/a"
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | ok "
+            f"| {d['compile_s']}s | {memgb} | {fits} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells):
+    rows = ["| arch | shape | compute | memory | collective | dominant "
+            "| 6ND/HLO | coll.bytes/chip |",
+            "|---|---|---|---|---|---|---|---|"]
+    for d in cells:
+        if d.get("status") != "ok" or d.get("mesh") != "16x16":
+            continue
+        r = d["roofline"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {r['collective_bytes']:.2e} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(cells):
+    """worst roofline fraction / most collective-bound / most representative."""
+    singles = [d for d in cells if d.get("status") == "ok"
+               and d.get("mesh") == "16x16"]
+
+    def frac(d):  # useful fraction of the bound resource
+        r = d["roofline"]
+        tot = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        ideal = r["compute_s"] if r["dominant"] == "compute" else r["memory_s"]
+        return ideal / max(tot, 1e-12)
+
+    worst = min(singles, key=frac)
+    coll = max(singles, key=lambda d: d["roofline"]["collective_s"]
+               / max(d["roofline"]["memory_s"], 1e-12))
+    return worst, coll
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    print("## Dry-run\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline (single pod, 256 chips)\n")
+    print(roofline_table(cells))
+    worst, coll = pick_hillclimb(cells)
+    print(f"\nworst-fraction cell: {worst['arch']} x {worst['shape']}")
+    print(f"most collective-bound: {coll['arch']} x {coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Serving engine: batched prefill + decode with KV caches.
+
+``make_serve_fns`` returns the two jit-able pure functions the dry-run
+lowers (``prefill_step``, ``decode_step``) plus a host-side ``generate``
+loop for the examples (greedy / temperature sampling).
+
+Cache layout: contiguous per-layer tensors allocated once at
+``max_len = prompt + max_new``; SWA archs get ring caches bounded by the
+window (mixtral long_500k: 4096 slots instead of 524k); SSM archs carry
+O(1) state. Continuous batching note: slot management across requests is
+host-side (examples/serve_lm.py) -- the device functions are fixed-shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+
+
+def make_serve_fns(cfg):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, cfg, batch, cache)
+
+    def decode_step(params, tokens, pos, cache):
+        return model.decode_step(params, cfg, tokens, pos, cache)
+
+    return prefill_step, decode_step
+
+
+def sample_token(key, logits, temperature: float = 0.0):
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def generate(params, cfg, prompts, max_new: int, *, key=None,
+             temperature: float = 0.0, extras=None):
+    """prompts: (B, S) int32. Returns (B, max_new) generated tokens.
+
+    Host loop over jitted single-token steps (the production engine would
+    run this under an async scheduler; step functions are identical).
+    """
+    prefill_step, decode_step = make_serve_fns(cfg)
+    prefill_j = jax.jit(prefill_step)
+    decode_j = jax.jit(decode_step)
+
+    b, s0 = prompts.shape
+    cache = model.init_cache(cfg, b, s0 + max_new)
+    batch = {"tokens": prompts}
+    if extras:
+        batch.update(extras)
+    logits, cache = prefill_j(params, batch, cache)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks = []
+    tok = sample_token(key, logits, temperature)[:, None]
+    toks.append(tok)
+    for i in range(1, max_new):
+        logits, cache = decode_j(params, tok, s0 + i - 1, cache)
+        key = jax.random.fold_in(key, i)
+        tok = sample_token(key, logits, temperature)[:, None]
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,131 @@
+"""Training step: loss -> grad -> clip -> AdamW, with grad-accumulation
+microbatching (lax.scan) and optional PowerSGD-compressed DP reduction.
+
+The returned ``train_step`` is a pure function suitable for jit/pjit AOT
+lowering (the dry-run compiles exactly this).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import losses, model
+from repro.optim import adamw
+
+
+def make_loss_fn(cfg, z_loss: float = 1e-4, loss_chunk: int = 512,
+                 param_shardings=None):
+    def loss_fn(params, batch):
+        if param_shardings is not None:
+            # Pins the *cotangent* sharding too (wsc transposes to itself):
+            # without this the layer-scan backward accumulates parameter
+            # grads in a replicated while-loop carry (~34 GiB/device for a
+            # 3B model -- measured, see EXPERIMENTS.md §Perf iteration 0).
+            params = jax.tree.map(jax.lax.with_sharding_constraint,
+                                  params, param_shardings)
+        hidden, metrics = model.forward_hidden(params, cfg, batch)
+        loss, lm = losses.chunked_lm_loss(model.unembed_fn(params, cfg),
+                                          hidden, batch, chunk=loss_chunk,
+                                          z_loss=z_loss)
+        if "moe_balance_loss" in metrics:
+            # balance term is diagnostic-weighted; DeepSeek-style bias
+            # balancing happens outside the gradient (router_bias update).
+            loss = loss + 1e-2 * metrics["moe_balance_loss"] / cfg.n_layers
+        return loss, {**lm, **metrics}
+    return loss_fn
+
+
+def _microbatch_grads(loss_fn, params, batch, n_micro: int, acc_shardings=None,
+                      mesh=None):
+    """Grad accumulation via scan: peak activation memory / n_micro.
+
+    ``acc_shardings``: param-shaped pytree of NamedSharding pinned onto the
+    f32 accumulator -- without it GSPMD replicates the scan carry (12.8 GB
+    for a 3B model; measured in the dry-run iteration log).
+
+    ``mesh``: when given, the reshaped (micro, batch, ...) tensors are
+    pinned to P(None, dp, ...). Without the pin GSPMD splits the data axis
+    across BOTH the micro and batch dims of the reshape, so every micro
+    step silently processes n_micro x the intended per-device tokens
+    (measured: 65536-token layer bodies where 16384 were intended).
+    """
+    def reshape(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        y = x.reshape(n_micro, b // n_micro, *x.shape[1:])
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.distributed.sharding import dp_axes
+            spec = P(None, dp_axes(mesh), *([None] * (y.ndim - 2)))
+            y = jax.lax.with_sharding_constraint(y, NamedSharding(mesh, spec))
+        return y
+
+    def pin(tree):
+        if acc_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, acc_shardings)
+
+    micro = jax.tree.map(reshape, batch)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def body(carry, mb):
+        acc, _ = carry
+        (loss, aux), g = grad_fn(params, mb)
+        acc = pin(jax.tree.map(lambda a, b_: a + b_.astype(a.dtype), acc, g))
+        return (acc, loss), aux
+
+    zeros = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+    (gsum, last_loss), auxs = jax.lax.scan(body, (zeros, jnp.float32(0)), micro)
+    grads = jax.tree.map(lambda g: g / n_micro, gsum)
+    aux = jax.tree.map(lambda x: x.mean(), auxs)
+    return last_loss, grads, aux
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *, n_micro: int = 0,
+                    grad_transform=None, acc_shardings=None, mesh=None,
+                    opt_update_specs=None):
+    """grad_transform: optional (grads, extra_state) -> (grads, extra_state,
+    metrics) hook -- PowerSGD plugs in here. ``acc_shardings`` (param-shaped
+    NamedSharding tree) pins both the grad-accumulator carry and the
+    backward's parameter-cotangent accumulator; ``mesh`` pins the
+    microbatch split to the dp axes."""
+    loss_fn = make_loss_fn(cfg, param_shardings=acc_shardings)
+
+    def train_step(state, batch):
+        params, opt_state, extra = state["params"], state["opt"], state.get("extra")
+        if n_micro and n_micro > 1:
+            loss, grads, aux = _microbatch_grads(loss_fn, params, batch, n_micro,
+                                                 acc_shardings, mesh)
+        else:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        if opt_update_specs is not None:
+            # ZeRO-1: slice grads onto the update shards right after the
+            # backward -- XLA fuses the DP all-reduce + slice into a
+            # reduce-scatter, and the f32 update math stays sharded.
+            from repro.distributed.sharding import maybe_wsc_spec
+            grads = jax.tree.map(maybe_wsc_spec, grads, opt_update_specs)
+        gmetrics = {}
+        if grad_transform is not None:
+            grads, extra, gmetrics = grad_transform(grads, extra)
+        params, opt_state, om = adamw.update(opt_cfg, params, grads, opt_state,
+                                             update_specs=opt_update_specs)
+        metrics = {"loss": loss, **aux, **om, **gmetrics}
+        new_state = {"params": params, "opt": opt_state}
+        if extra is not None:
+            new_state["extra"] = extra
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg, opt_cfg: adamw.AdamWConfig, extra=None):
+    params = model.init(key, cfg)
+    state = {"params": params, "opt": adamw.init(opt_cfg, params)}
+    if extra is not None:
+        state["extra"] = extra
+    return state

@@ -1,0 +1,163 @@
+"""Attention substrate tests: chunked online-softmax vs naive oracle,
+GQA grouping, SWA windows, MLA, decode equivalence, ring caches."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention
+
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+def naive_attention(q, k, v, causal=True, window=None, scale=None):
+    b, sq, h, d = q.shape
+    _, sk, hk, _ = k.shape
+    g = h // hk
+    scale = scale or d ** -0.5
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) * scale
+    qp, kp = jnp.arange(sq)[:, None], jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr).astype(q.dtype)
+
+
+def _qkv(key, b, sq, sk, h, hk, d, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, sq, h, d), dtype)
+    k = jax.random.normal(k2, (b, sk, hk, d), dtype)
+    v = jax.random.normal(k3, (b, sk, hk, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("h,hk", [(4, 4), (8, 2), (6, 1)])
+def test_chunked_matches_naive_gqa(h, hk):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 64, 64, h, hk, 16)
+    got = attention.chunked_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(got, naive_attention(q, k, v), **TOL)
+
+
+@pytest.mark.parametrize("qc,kc", [(8, 8), (16, 32), (64, 64), (13, 7)])
+def test_chunk_size_invariance(qc, kc):
+    """Chunk sizes (incl. non-divisors, which fall back) never change output."""
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 56, 56, 4, 2, 8)
+    got = attention.chunked_attention(q, k, v, q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(got, naive_attention(q, k, v), **TOL)
+
+
+def test_sliding_window():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 2, 64, 64, 4, 4, 8)
+    got = attention.chunked_attention(q, k, v, window=16, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(got, naive_attention(q, k, v, window=16), **TOL)
+
+
+def test_bidirectional():
+    q, k, v = _qkv(jax.random.PRNGKey(3), 2, 32, 48, 4, 4, 8)
+    got = attention.chunked_attention(q, k, v, causal=False, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(got, naive_attention(q, k, v, causal=False), **TOL)
+
+
+def test_decode_matches_full():
+    """decode_attention at position t == row t of full causal attention."""
+    b, s, h, hk, d = 2, 24, 4, 2, 8
+    q, k, v = _qkv(jax.random.PRNGKey(4), b, s, s, h, hk, d)
+    full = naive_attention(q, k, v)
+    for t in [0, 7, 23]:
+        got = attention.decode_attention(q[:, t:t + 1], k, v, t + 1)
+        np.testing.assert_allclose(got[:, 0], full[:, t], **TOL)
+
+
+def test_decode_window_matches():
+    b, s, h, d = 1, 32, 4, 8
+    q, k, v = _qkv(jax.random.PRNGKey(5), b, s, s, h, h, d)
+    full = naive_attention(q, k, v, window=8)
+    for t in [10, 31]:
+        got = attention.decode_attention(q[:, t:t + 1], k, v, t + 1, window=8)
+        np.testing.assert_allclose(got[:, 0], full[:, t], **TOL)
+
+
+def test_gqa_fwd_then_decode_equivalence():
+    """Prefill(S) + decode(S..S+2) == full forward(S+3) last rows."""
+    d_model, h, hk, hd = 32, 4, 2, 8
+    cfg = dict(n_heads=h, n_kv=hk, head_dim=hd)
+    key = jax.random.PRNGKey(6)
+    params = attention.gqa_init(key, d_model, h, hk, hd, dtype=jnp.float32)
+    s_total = 20
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, s_total, d_model))
+    full, _ = attention.gqa_fwd(params, x, q_chunk=8, kv_chunk=8, **cfg)
+
+    s0 = s_total - 3
+    _, (k, v) = attention.gqa_fwd(params, x[:, :s0], q_chunk=8, kv_chunk=8, **cfg)
+    ck = jnp.zeros((2, s_total, hk, hd)).at[:, :s0].set(k)
+    cv = jnp.zeros((2, s_total, hk, hd)).at[:, :s0].set(v)
+    for t in range(s0, s_total):
+        out, ck, cv = attention.gqa_decode(params, x[:, t:t + 1], ck, cv, t, **cfg)
+        np.testing.assert_allclose(out[:, 0], full[:, t], rtol=2e-3, atol=1e-4)
+
+
+def test_ring_cache_decode_matches_window():
+    """SWA ring cache (size=window) == windowed attention over full cache."""
+    d_model, h, hd, w = 32, 4, 8, 8
+    cfg = dict(n_heads=h, n_kv=h, head_dim=hd)
+    params = attention.gqa_init(jax.random.PRNGKey(8), d_model, h, h, hd,
+                                dtype=jnp.float32)
+    s = 24
+    x = jax.random.normal(jax.random.PRNGKey(9), (1, s, d_model))
+    full, _ = attention.gqa_fwd(params, x, window=w, q_chunk=8, kv_chunk=8, **cfg)
+
+    ring_k = jnp.zeros((1, w, h, hd))
+    ring_v = jnp.zeros((1, w, h, hd))
+    big_k = jnp.zeros((1, s, h, hd))
+    big_v = jnp.zeros((1, s, h, hd))
+    for t in range(s):
+        out_r, ring_k, ring_v = attention.gqa_decode(
+            params, x[:, t:t + 1], ring_k, ring_v, t, ring_window=w, **cfg)
+        out_f, big_k, big_v = attention.gqa_decode(
+            params, x[:, t:t + 1], big_k, big_v, t, window=w, **cfg)
+        np.testing.assert_allclose(out_r, out_f, rtol=2e-3, atol=1e-4)
+        np.testing.assert_allclose(out_r[:, 0], full[:, t], rtol=2e-3, atol=1e-4)
+
+
+def test_mla_fwd_and_decode_equivalence():
+    d_model, h = 32, 4
+    mla_kw = dict(n_heads=h, nope_dim=8, rope_dim=4, v_dim=8)
+    params = attention.mla_init(jax.random.PRNGKey(10), d_model, h,
+                                q_lora=16, kv_lora=8, dtype=jnp.float32, **{
+                                    k: v for k, v in mla_kw.items() if k != "n_heads"})
+    s = 12
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, s, d_model))
+    full, (c, kpe) = attention.mla_fwd(params, x, q_chunk=4, kv_chunk=4, **mla_kw)
+
+    s0 = s - 3
+    _, (c0, kpe0) = attention.mla_fwd(params, x[:, :s0], q_chunk=4, kv_chunk=4, **mla_kw)
+    cc = jnp.zeros((2, s, 8)).at[:, :s0].set(c0)
+    ckpe = jnp.zeros((2, s, 4)).at[:, :s0].set(kpe0)
+    for t in range(s0, s):
+        for absorb in (True, False):
+            out, cc2, ckpe2 = attention.mla_decode(params, x[:, t:t + 1], cc, ckpe,
+                                                   t, absorb=absorb, **mla_kw)
+            np.testing.assert_allclose(out[:, 0], full[:, t], rtol=2e-3, atol=1e-4)
+        cc, ckpe = cc2, ckpe2
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.integers(4, 40), h=st.sampled_from([2, 4]), seed=st.integers(0, 999))
+def test_property_causality(sq, h, seed):
+    """Perturbing future tokens never changes past outputs."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    q, k, v = _qkv(k1, 1, sq, sq, h, h, 8)
+    out1 = attention.chunked_attention(q, k, v, q_chunk=8, kv_chunk=8)
+    t = sq // 2
+    k2v = k.at[:, t:].add(jax.random.normal(k2, k[:, t:].shape))
+    v2v = v.at[:, t:].add(1.0)
+    out2 = attention.chunked_attention(q, k2v, v2v, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(out1[:, :t], out2[:, :t], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,146 @@
+"""Fault tolerance: checkpoint roundtrip/atomicity/async, ABFT corruption
+detection, watchdog, preemption, elastic data rebalance."""
+
+import os
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data import pipeline
+from repro.ft import abft, watchdog
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (512, 256)),
+        "b": jnp.zeros((256,), jnp.bfloat16),
+        "nested": {"m": jax.random.normal(k2, (512, 256)),
+                   "step": jnp.int32(7)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_write=False)
+    tree = _tree(jax.random.PRNGKey(0))
+    ckpt.save(3, tree)
+    restored, step = ckpt.restore()
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_async_and_retention(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), keep_n=2, async_write=True)
+    tree = _tree(jax.random.PRNGKey(1))
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, jax.tree.map(lambda x: x, tree))
+    ckpt.wait()
+    assert ckpt.all_steps() == [3, 4]
+    _, step = ckpt.restore()
+    assert step == 4
+
+
+def test_checkpoint_ignores_torn_tmp(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_write=False)
+    ckpt.save(1, _tree(jax.random.PRNGKey(2)))
+    os.makedirs(tmp_path / "step_000000002.tmp")  # simulated torn write
+    assert ckpt.latest_step() == 1
+    restored, step = ckpt.restore()
+    assert step == 1
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_write=False)
+    ckpt.save(1, _tree(jax.random.PRNGKey(3)))
+    d = tmp_path / "step_000000001"
+    target = d / "arr_00000.npy"
+    raw = bytearray(target.read_bytes())
+    raw[-3] ^= 0xFF  # flip a payload bit
+    target.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="corruption"):
+        ckpt.restore()
+
+
+def test_abft_detects_bitflip():
+    params = {"w": jax.random.normal(jax.random.PRNGKey(4), (1024, 256)),
+              "tiny": jnp.ones((4, 4))}  # below threshold: unprotected
+    cs = abft.encode_tree(params, interpret=True)
+    ok, _ = abft.verify_tree(params, cs, interpret=True)
+    assert bool(ok)
+    corrupted = {**params, "w": params["w"].at[123, 45].set(37.0)}
+    ok2, devs = abft.verify_tree(corrupted, cs, interpret=True)
+    assert not bool(ok2)
+
+
+def test_abft_tolerates_fp_noise():
+    params = {"w": jax.random.normal(jax.random.PRNGKey(5), (2048, 128))}
+    cs = abft.encode_tree(params, interpret=True)
+    jittered = {"w": params["w"] * (1 + 1e-7)}
+    ok, _ = abft.verify_tree(jittered, cs, rtol=1e-3, interpret=True)
+    assert bool(ok)
+
+
+def test_abft_checksum_linearity_covers_allreduce():
+    """checksum(sum_i g_i) == sum_i checksum(g_i): encoding local grads
+    before the DP all-reduce and summing checksums alongside detects
+    corruption introduced BY the collective itself."""
+    g1 = jax.random.normal(jax.random.PRNGKey(6), (512, 64))
+    g2 = jax.random.normal(jax.random.PRNGKey(7), (512, 64))
+    c1 = abft.encode_leaf(g1, interpret=True)
+    c2 = abft.encode_leaf(g2, interpret=True)
+    c_sum = abft.encode_leaf(g1 + g2, interpret=True)
+    np.testing.assert_allclose(np.asarray(c1 + c2), np.asarray(c_sum),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_watchdog_flags_straggler():
+    events = []
+    wd = watchdog.StepWatchdog(straggler_factor=1.5,
+                               on_straggler=lambda dt, e: events.append(dt))
+    for _ in range(5):
+        wd.step_begin(); time.sleep(0.01); wd.step_end()
+    wd.step_begin(); time.sleep(0.06); m = wd.step_end()
+    assert m["straggler"] and len(events) == 1
+    # EWMA not poisoned by the straggler
+    assert wd.ewma < 0.03
+
+
+def test_preemption_flag():
+    h = watchdog.PreemptionHandler(signals=(signal.SIGUSR1,))
+    assert not h.requested
+    os.kill(os.getpid(), signal.SIGUSR1)
+    time.sleep(0.05)
+    assert h.requested
+    h.restore()
+
+
+def test_elastic_data_rebalance_preserves_stream():
+    """Same global stream under 1 host and under 4 hosts."""
+    base = pipeline.DataConfig(seed=9, seq_len=16, global_batch=8, vocab_size=32)
+    full = pipeline.batch_for_step(base, 11)["tokens"]
+    parts = []
+    for h in range(4):
+        cfg = pipeline.DataConfig(seed=9, seq_len=16, global_batch=8,
+                                  vocab_size=32, host_index=h, host_count=4)
+        parts.append(pipeline.batch_for_step(cfg, 11)["tokens"])
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_checkpoint_restore_resharded(tmp_path):
+    """Restore under a different 'device layout' (host numpy roundtrip is
+    layout-free; device_put sharding equivalence is covered by the
+    dry-run's mesh machinery)."""
+    ckpt = Checkpointer(str(tmp_path), async_write=False)
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    ckpt.save(1, tree)
+    sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    restored, _ = ckpt.restore(shardings={"w": sharding})
+    np.testing.assert_array_equal(restored["w"], tree["w"])

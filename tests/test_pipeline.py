@@ -1,0 +1,62 @@
+"""GPipe pipeline: schedule correctness vs sequential application."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import pipeline
+
+
+def _layer_fn(lp, x):
+    return jnp.tanh(x @ lp["w"] + lp["b"])
+
+
+def _stack_params(key, n_layers, d):
+    ks = jax.random.split(key, n_layers)
+    return {
+        "w": jnp.stack([jax.random.normal(k, (d, d)) * 0.5 for k in ks]),
+        "b": jnp.zeros((n_layers, d)),
+    }
+
+
+def _sequential(params, x):
+    def body(h, lp):
+        return _layer_fn(lp, h), None
+    out, _ = jax.lax.scan(body, x, params)
+    return out
+
+
+@pytest.mark.parametrize("n_layers,n_stages,n_micro", [
+    (8, 4, 4), (8, 2, 3), (6, 3, 1), (4, 4, 5),
+])
+def test_pipeline_matches_sequential(n_layers, n_stages, n_micro):
+    d, b = 16, 4
+    params = _stack_params(jax.random.PRNGKey(0), n_layers, d)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, b, d))
+
+    want = jax.vmap(lambda mb: _sequential(params, mb))(x)
+
+    stages = pipeline.split_stages(params, n_stages)
+    stage_fn = pipeline.make_stage_fn(_layer_fn)
+    got = jax.jit(lambda sp, mb: pipeline.pipeline_apply(
+        stage_fn, sp, mb, stage_axis=None))(stages, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pipeline_gradients_flow():
+    d = 8
+    params = _stack_params(jax.random.PRNGKey(2), 4, d)
+    stages = pipeline.split_stages(params, 2)
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 2, d))
+    stage_fn = pipeline.make_stage_fn(_layer_fn)
+
+    def loss(sp):
+        out = pipeline.pipeline_apply(stage_fn, sp, x, stage_axis=None)
+        return jnp.sum(out ** 2)
+
+    g = jax.grad(loss)(stages)
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf)).all()
+        assert float(jnp.abs(leaf).max()) > 0

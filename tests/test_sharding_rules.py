@@ -1,0 +1,101 @@
+"""Partition-rule engine: spec assignment, divisibility guards, strategies.
+
+These run against a mesh built from the single local device via an
+AbstractMesh-free path: rules and guards are pure functions of axis sizes,
+so we construct Mesh objects over a 1-device 'grid' with logical sizes via
+jax.sharding.AbstractMesh (no real devices needed for spec logic)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import registry
+from repro.distributed import sharding
+from repro.models import model
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _shapes(arch):
+    cfg = registry.get_config(arch)
+    key_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return cfg, jax.eval_shape(lambda k: model.init(k, cfg), key_s)
+
+
+def _flat_with_paths(tree):
+    return {sharding.path_str(p): v for p, v in
+            jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+
+def test_dense_tp_rules():
+    cfg, shapes = _shapes("llama3.2-3b")
+    specs = sharding.make_param_specs(cfg, shapes, MESH)
+    flat = _flat_with_paths(specs)
+    # attention q projection: heads over model (last dim), scan dim None
+    assert flat["segments/0/attn/wq"][-1] == "model"
+    assert flat["segments/0/attn/wo"][-2] == "model"
+    # vocab over model
+    assert flat["embed/table"][0] == "model"
+    # norms replicated
+    assert all(a is None for a in tuple(flat["segments/0/norm1/scale"]))
+
+
+def test_divisibility_guard_falls_back():
+    cfg, shapes = _shapes("hubert-xlarge")   # vocab 504 % 16 != 0
+    specs = sharding.make_param_specs(cfg, shapes, MESH)
+    flat = _flat_with_paths(specs)
+    assert flat["embed/table"][0] is None      # guarded to replicate
+    # d_ff 5120 divides => still sharded
+    assert flat["segments/0/ffn/w_up"][-1] == "model"
+
+
+def test_moe_expert_rules_ep_vs_tp_fallback():
+    cfg, shapes = _shapes("deepseek-v3-671b")  # 256 experts: EP
+    specs = sharding.make_param_specs(cfg, shapes, MESH)
+    flat = _flat_with_paths(specs)
+    k = [p for p in flat if p.endswith("experts/w_gate")][0]
+    assert flat[k][-3] == "model"              # expert dim over model
+    assert flat[k][-2] == "data"               # FSDP (671B > threshold)
+
+    cfg2, shapes2 = _shapes("mixtral-8x7b")    # 8 experts < 16: TP fallback
+    specs2 = sharding.make_param_specs(cfg2, shapes2, MESH)
+    flat2 = _flat_with_paths(specs2)
+    k2 = [p for p in flat2 if p.endswith("experts/w_gate")][0]
+    assert flat2[k2][-3] is None               # expert dim replicated
+    assert flat2[k2][-1] == "model"            # d_ff sharded instead
+
+
+def test_dp_strategy_replicates_params_shards_moments():
+    cfg, shapes = _shapes("llama3.2-3b")
+    specs = sharding.make_param_specs(cfg, shapes, MESH, strategy="dp")
+    assert all(all(a is None for a in tuple(s)) for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    opt = sharding.make_opt_specs(specs, mesh=MESH, params_shape=shapes,
+                                  zero1=True)
+    flat = _flat_with_paths(opt["moments"])
+    mk = [p for p in flat if p.endswith("attn/wq/m")][0]
+    assert ("data", "model") in tuple(flat[mk])
+
+
+def test_cache_specs_sequence_parallel_fallback():
+    cfg = registry.get_config("qwen2-72b")     # kv=8 < 16 => SP on seq dim
+    cache_shape = jax.eval_shape(lambda: model.init_cache(cfg, 128, 1024))
+    specs = sharding.cache_specs(cfg, MESH, cache_shape)
+    flat = _flat_with_paths(specs)
+    k = [p for p in flat if p.endswith("/k")][0]
+    spec = tuple(flat[k])
+    assert spec[-3] == "model"                 # sequence dim sharded
+    assert spec[-2] is None                    # kv heads (8) replicated
+
+
+def test_batch_specs_multi_pod():
+    cfg = registry.get_config("llama3.2-3b")
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32)}
+    specs = sharding.batch_specs(cfg, MESH3, batch)
+    assert tuple(specs["tokens"])[0] == ("pod", "data")
+    # batch=1 (long_500k): falls back to replicated
+    b1 = {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)}
+    specs1 = sharding.batch_specs(cfg, MESH3, b1)
+    assert tuple(specs1["tokens"])[0] is None
