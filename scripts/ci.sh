@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 CI entry: exactly the command ROADMAP.md pins.
+# Optional dev deps (see requirements-dev.txt) are installed best-effort;
+# the suite is self-sufficient without them (tests/conftest.py provides a
+# hypothesis fallback).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${REPRO_CI_INSTALL:-0}" == "1" ]] \
+        && ! python -c "import hypothesis" 2>/dev/null; then
+    pip install -r requirements-dev.txt \
+        || echo "ci.sh: install failed, using the in-repo hypothesis fallback"
+fi
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

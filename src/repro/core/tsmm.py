@@ -12,9 +12,18 @@ bound classifier) and routes to:
 
 Dispatch is static (shapes are trace-time constants under jit), so choosing
 a path never introduces control flow into the compiled graph.
+
+Both entries are differentiable: the ops they dispatch to carry custom_vjp
+rules whose backwards re-enter this dispatcher (the VJP of one tall-skinny
+class lands in another), and the dense fallback is a plain ``dot_general``.
+``REPRO_TSMM=off`` (also ``0``/``false``) forces every call onto the dense
+path -- the A/B escape hatch for benchmarking the kernels against stock XLA
+without touching call sites.
 """
 
 from __future__ import annotations
+
+import os
 
 import jax.numpy as jnp
 from jax import lax
@@ -31,8 +40,38 @@ MAX_SKINNY = 256
 MIN_TALL = 2048
 
 
+def enabled() -> bool:
+    """False when REPRO_TSMM=off|0|false: every call takes the dense path.
+
+    Read at trace time, NOT at execution time: a jitted caller bakes the
+    choice into its cache entry, so flipping the env var does not affect
+    already-compiled functions. Each A/B arm needs a fresh process or a
+    ``jax.clear_caches()`` between runs.
+    """
+    return os.environ.get("REPRO_TSMM", "on").lower() not in ("off", "0", "false")
+
+
+def _spmd_mesh_active() -> bool:
+    """True inside a ``with mesh:`` scope spanning more than one device.
+
+    The Mosaic ``pallas_call`` custom call has no GSPMD partitioning rule,
+    so routing a global-jit SPMD computation into the kernels would at
+    best replicate the streamed operand per chip. Until a shard_map
+    wrapper lands (ROADMAP open item), kernel dispatch under a multi-chip
+    mesh context defers to the dense path, which GSPMD partitions fine.
+    ``force=`` still overrides (used by shard_map call sites that manage
+    their own partitioning).
+    """
+    try:
+        from jax._src import mesh as _mesh_mod
+        m = _mesh_mod.thread_resources.env.physical_mesh
+        return bool(m.axis_names) and m.size > 1
+    except Exception:
+        return False
+
+
 def classify_gemm(m: int, k: int, n: int) -> str:
-    """Return one of 'tsm2r' | 'tsm2l' | 'tsmt_hint' | 'dense'."""
+    """Return one of 'tsm2r' | 'tsm2l' | 'dense'."""
     if m >= MIN_TALL and n <= MAX_SKINNY and m >= SKINNY_RATIO * n:
         if k <= MAX_SKINNY:          # m >> k ~ n: tiny contraction
             return "tsm2l"
@@ -41,12 +80,21 @@ def classify_gemm(m: int, k: int, n: int) -> str:
     return "dense"
 
 
+def classify_gemm_t(m: int, a_dim: int, b_dim: int) -> str:
+    """Transposed-entry classifier: 'tsmt' | 'dense' for X[m,a]^T Y[m,b]."""
+    if (m >= MIN_TALL and b_dim <= 512
+            and m >= SKINNY_RATIO * max(a_dim, b_dim) // 4):
+        return "tsmt"
+    return "dense"
+
+
 def tsmm(a: jnp.ndarray, b: jnp.ndarray, *, interpret: bool | None = None,
          force: str | None = None) -> jnp.ndarray:
-    """A[m,k] @ B[k,n] via the best path for the shape."""
+    """A[m,k] @ B[k,n] via the best path for the shape. Differentiable."""
     m, k = a.shape
     n = b.shape[1]
-    kind = force or classify_gemm(m, k, n)
+    kind = force or (classify_gemm(m, k, n)
+                     if enabled() and not _spmd_mesh_active() else "dense")
     if kind == "tsm2r":
         return ops.tsm2r(a, b, interpret=interpret)
     if kind == "tsm2l":
@@ -57,14 +105,13 @@ def tsmm(a: jnp.ndarray, b: jnp.ndarray, *, interpret: bool | None = None,
 
 def tsmm_t(x: jnp.ndarray, y: jnp.ndarray, *, interpret: bool | None = None,
            force: str | None = None) -> jnp.ndarray:
-    """X[m,a]^T @ Y[m,b] via TSMT when m is huge and a, b small-ish."""
+    """X[m,a]^T @ Y[m,b] via TSMT when m is huge and a, b small-ish.
+    Differentiable."""
     m, a_dim = x.shape
     b_dim = y.shape[1]
-    use_kernel = force == "tsmt" or (
-        force is None and m >= MIN_TALL and b_dim <= 512
-        and m >= SKINNY_RATIO * max(a_dim, b_dim) // 4
-    )
-    if use_kernel:
+    kind = force or (classify_gemm_t(m, a_dim, b_dim)
+                     if enabled() and not _spmd_mesh_active() else "dense")
+    if kind == "tsmt":
         return ops.tsmt(x, y, interpret=interpret)
     return lax.dot_general(x, y, (((0,), (0,)), ((), ())),
                            preferred_element_type=jnp.float32).astype(x.dtype)

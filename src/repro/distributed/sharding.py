@@ -28,7 +28,15 @@ import re
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.kernels import compat
+
 FSDP_THRESHOLD = 30e9
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """Device-free mesh for spec logic; AbstractMesh signature drifted
+    across JAX versions, so construction goes through the compat layer."""
+    return compat.abstract_mesh(axis_sizes, axis_names)
 
 
 def dp_axes(mesh: Mesh):

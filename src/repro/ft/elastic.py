@@ -20,6 +20,7 @@ import jax
 
 from repro.data.pipeline import DataConfig
 from repro.distributed import sharding
+from repro.kernels import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,8 +35,7 @@ def rescale_plan(*, devices=None, model_axis: int = 1,
     devices = devices if devices is not None else jax.devices()
     n = len(devices)
     assert n % model_axis == 0
-    mesh = jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((n // model_axis, model_axis), ("data", "model"))
     return RescalePlan(mesh=mesh, host_index=host_index, host_count=host_count)
 
 

@@ -1,0 +1,145 @@
+"""JAX/Pallas version-compatibility layer.
+
+Every symbol that has drifted across the JAX versions this repo must run on
+is resolved here, once, at import time. Kernel/model/test code imports from
+this module instead of guessing which spelling the installed JAX uses.
+
+Shims and the version ranges they cover:
+
+* ``CompilerParams`` -- the Mosaic compiler-params class.
+  ``pltpu.TPUCompilerParams`` on jax 0.4.30 -- 0.6.x; renamed to
+  ``pltpu.CompilerParams`` in 0.7. Resolution order prefers the new name.
+* ``VMEM`` -- the TPU memory-space handle used for scratch shapes.
+  Present as ``pltpu.VMEM`` on every covered version; on very old releases
+  it lived on ``pltpu.TPUMemorySpace.VMEM`` (fallback kept for 0.4.2x).
+* ``abstract_mesh(axis_sizes, axis_names)`` -- ``jax.sharding.AbstractMesh``
+  construction. 0.4.3x takes one ``((name, size), ...)`` shape tuple;
+  0.5+ takes ``(axis_sizes, axis_names)`` positionally. The helper accepts
+  the modern calling convention and translates when needed.
+* ``optimization_barrier`` -- ``jax.lax.optimization_barrier`` has no
+  differentiation rule before jax 0.5.1 (jax-ml/jax#25392). On those
+  versions we wrap it in a ``jax.custom_vjp`` identity whose backward
+  re-applies the barrier to the cotangent, so reverse-mode keeps the same
+  hoisting protection the primal asked for. On newer JAX the native
+  primitive (which differentiates) is used directly.
+* ``make_mesh(shape, axis_names)`` -- ``jax.make_mesh`` grew the
+  ``axis_types`` kwarg (and ``jax.sharding.AxisType``) in 0.5; on 0.4.3x
+  the kwarg does not exist and Auto is the only behavior. The helper
+  passes explicit-Auto types only where the installed JAX has them.
+
+The probes are trace-time only (``jax.eval_shape``): importing this module
+never compiles or executes device code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "CompilerParams",
+    "VMEM",
+    "abstract_mesh",
+    "make_mesh",
+    "optimization_barrier",
+    "BARRIER_IS_DIFFERENTIABLE",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mosaic compiler params: pltpu.CompilerParams (new) vs TPUCompilerParams
+# ---------------------------------------------------------------------------
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams", None)
+if CompilerParams is None:  # pragma: no cover - ancient pallas
+    raise ImportError(
+        "pallas TPU backend exposes neither CompilerParams nor "
+        "TPUCompilerParams; need jax >= 0.4.30")
+
+
+# ---------------------------------------------------------------------------
+# VMEM scratch memory space
+# ---------------------------------------------------------------------------
+
+VMEM = getattr(pltpu, "VMEM", None)
+if VMEM is None:  # pragma: no cover - pre-0.4.30 spelling
+    VMEM = pltpu.TPUMemorySpace.VMEM
+
+
+# ---------------------------------------------------------------------------
+# AbstractMesh construction
+# ---------------------------------------------------------------------------
+
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]):
+    """``AbstractMesh((16, 16), ("data", "model"))`` on every covered JAX.
+
+    jax >= 0.5 takes exactly this signature; 0.4.3x wants a single
+    ``((name, size), ...)`` tuple instead, which raises
+    ``TypeError: 'int' object is not iterable`` when handed bare sizes.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def make_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported.
+
+    jax >= 0.5 wants ``axis_types=(AxisType.Auto, ...)`` spelled out (the
+    default flipped during the explicit-sharding rollout); 0.4.3x has
+    neither the kwarg nor ``jax.sharding.AxisType`` and is always Auto.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable optimization_barrier
+# ---------------------------------------------------------------------------
+
+def _probe_barrier_grad() -> bool:
+    try:
+        jax.eval_shape(
+            jax.grad(lambda x: jax.lax.optimization_barrier(x * 1.0)),
+            jax.ShapeDtypeStruct((), jnp.float32))
+        return True
+    except NotImplementedError:
+        return False
+    except Exception:
+        return False
+
+
+BARRIER_IS_DIFFERENTIABLE = _probe_barrier_grad()
+
+
+@jax.custom_vjp
+def _barrier_vjp(x):
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return _barrier_vjp(x), None
+
+
+def _barrier_bwd(_, ct):
+    # Barrier the cotangent too: the reverse pass wants the same
+    # hoisting protection (e.g. keeping f32 upcasts loop-local) as the
+    # primal that requested the barrier.
+    return (jax.lax.optimization_barrier(ct),)
+
+
+_barrier_vjp.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+def optimization_barrier(x):
+    """Identity that blocks XLA hoisting; differentiable on every JAX."""
+    if BARRIER_IS_DIFFERENTIABLE:
+        return jax.lax.optimization_barrier(x)
+    return _barrier_vjp(x)

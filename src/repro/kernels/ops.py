@@ -4,6 +4,20 @@ Handles: block-size selection (perf model), padding to block multiples
 (zero-padding is exact for GEMM), interpret-mode auto-detection (CPU runs
 the kernel bodies in Python for correctness; TPU compiles via Mosaic), and
 lane-dim padding of skinny minor dims when lowering for real TPUs.
+
+All three entries carry ``jax.custom_vjp`` rules whose backwards re-dispatch
+through ``repro.core.tsmm`` -- the paper's central observation applied to
+autodiff: the VJP of one tall-and-skinny GEMM class lands in another.
+
+    tsm2r/tsm2l:  C = A B        Abar = Chat B^T   (TSM2L-shaped for TSM2L)
+                                 Bbar = A^T Chat   (TSMTTSM shape -> tsmt)
+    tsmt:         C = X^T Y      Xbar = Y Chat^T   (TSM2L-shaped)
+                                 Ybar = X Chat     (TSM2L-shaped)
+
+Routing goes through ``tsmm.classify_gemm`` / ``tsmm.classify_gemm_t``, so
+gradients stay inside the tall-skinny regime instead of falling back to XLA
+dense dots; shapes that leave the regime degrade to ``dot_general`` exactly
+like the forward dispatcher does.
 """
 
 from __future__ import annotations
@@ -34,10 +48,18 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
-def tsm2r(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
-          block_k: int | None = None, spec: perf_model.TPUSpec = perf_model.V5E,
-          interpret: bool | None = None) -> jnp.ndarray:
-    """C[m,n] = A[m,k] @ B[k,n], m ~ k >> n. Paper's TSM2R."""
+def _dispatcher():
+    # Deferred: repro.core.tsmm imports this module (forward dispatch);
+    # the backward-pass dependency in the other direction stays lazy.
+    from repro.core import tsmm
+    return tsmm
+
+
+# ---------------------------------------------------------------------------
+# TSM2R
+# ---------------------------------------------------------------------------
+
+def _tsm2r_impl(a, b, block_m, block_k, spec, interpret):
     m, k = a.shape
     n = b.shape[1]
     if interpret is None:
@@ -55,10 +77,42 @@ def tsm2r(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
     return out[:m]
 
 
-def tsm2l(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
-          spec: perf_model.TPUSpec = perf_model.V5E,
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _tsm2r_diff(a, b, block_m, block_k, spec, interpret):
+    return _tsm2r_impl(a, b, block_m, block_k, spec, interpret)
+
+
+def _tsm2r_fwd(a, b, block_m, block_k, spec, interpret):
+    return _tsm2r_impl(a, b, block_m, block_k, spec, interpret), (a, b)
+
+
+def _tsm2r_bwd(block_m, block_k, spec, interpret, res, ct):
+    a, b = res
+    tsmm = _dispatcher()
+    # Abar[m,k] = Chat[m,n] B^T[n,k]: tiny contraction; TSM2L-shaped when
+    # k is small, dense when k ~ m (the TSM2R case) -- classifier decides.
+    da = tsmm.tsmm(ct, b.T, interpret=interpret)
+    # Bbar[k,n] = A^T[k,m] Chat[m,n]: reduction over tall m -- the TSMTTSM
+    # shape (Ernst et al.), dispatched via classify_gemm_t.
+    db = tsmm.tsmm_t(a, ct, interpret=interpret)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_tsm2r_diff.defvjp(_tsm2r_fwd, _tsm2r_bwd)
+
+
+def tsm2r(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
+          block_k: int | None = None, spec: perf_model.TPUSpec = perf_model.V5E,
           interpret: bool | None = None) -> jnp.ndarray:
-    """C[m,n] = A[m,k] @ B[k,n], m >> k ~ n. Paper's TSM2L."""
+    """C[m,n] = A[m,k] @ B[k,n], m ~ k >> n. Paper's TSM2R. Differentiable."""
+    return _tsm2r_diff(a, b, block_m, block_k, spec, interpret)
+
+
+# ---------------------------------------------------------------------------
+# TSM2L
+# ---------------------------------------------------------------------------
+
+def _tsm2l_impl(a, b, block_m, spec, interpret):
     m, k = a.shape
     n = b.shape[1]
     if interpret is None:
@@ -71,10 +125,40 @@ def tsm2l(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
     return out[:m]
 
 
-def tsmt(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int | None = None,
-         block_a: int | None = None, spec: perf_model.TPUSpec = perf_model.V5E,
-         interpret: bool | None = None) -> jnp.ndarray:
-    """C[a,b] = X[m,a]^T @ Y[m,b], m >> a, b. TSMTTSM-style extension."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _tsm2l_diff(a, b, block_m, spec, interpret):
+    return _tsm2l_impl(a, b, block_m, spec, interpret)
+
+
+def _tsm2l_fwd(a, b, block_m, spec, interpret):
+    return _tsm2l_impl(a, b, block_m, spec, interpret), (a, b)
+
+
+def _tsm2l_bwd(block_m, spec, interpret, res, ct):
+    a, b = res
+    tsmm = _dispatcher()
+    # Abar[m,k] = Chat[m,n] B^T[n,k]: m >> n ~ k -- exactly TSM2L again.
+    da = tsmm.tsmm(ct, b.T, interpret=interpret)
+    # Bbar[k,n] = A^T Chat: tall-m reduction -> TSMT.
+    db = tsmm.tsmm_t(a, ct, interpret=interpret)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_tsm2l_diff.defvjp(_tsm2l_fwd, _tsm2l_bwd)
+
+
+def tsm2l(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
+          spec: perf_model.TPUSpec = perf_model.V5E,
+          interpret: bool | None = None) -> jnp.ndarray:
+    """C[m,n] = A[m,k] @ B[k,n], m >> k ~ n. Paper's TSM2L. Differentiable."""
+    return _tsm2l_diff(a, b, block_m, spec, interpret)
+
+
+# ---------------------------------------------------------------------------
+# TSMT
+# ---------------------------------------------------------------------------
+
+def _tsmt_impl(x, y, block_m, block_a, spec, interpret):
     m, a_dim = x.shape
     b_dim = y.shape[1]
     if interpret is None:
@@ -90,6 +174,36 @@ def tsmt(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int | None = None,
     out = tsmt_pallas(x_p, y_p, block_m=block_m, block_a=block_a,
                       interpret=interpret)
     return out[:a_dim]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _tsmt_diff(x, y, block_m, block_a, spec, interpret):
+    return _tsmt_impl(x, y, block_m, block_a, spec, interpret)
+
+
+def _tsmt_fwd(x, y, block_m, block_a, spec, interpret):
+    return _tsmt_impl(x, y, block_m, block_a, spec, interpret), (x, y)
+
+
+def _tsmt_bwd(block_m, block_a, spec, interpret, res, ct):
+    x, y = res
+    tsmm = _dispatcher()
+    # Xbar[m,a] = Y[m,b] Chat^T[b,a] and Ybar[m,b] = X[m,a] Chat[a,b]:
+    # both are tall-m, tiny-contraction products -- TSM2L-shaped.
+    dx = tsmm.tsmm(y, ct.T, interpret=interpret)
+    dy = tsmm.tsmm(x, ct, interpret=interpret)
+    return dx.astype(x.dtype), dy.astype(y.dtype)
+
+
+_tsmt_diff.defvjp(_tsmt_fwd, _tsmt_bwd)
+
+
+def tsmt(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int | None = None,
+         block_a: int | None = None, spec: perf_model.TPUSpec = perf_model.V5E,
+         interpret: bool | None = None) -> jnp.ndarray:
+    """C[a,b] = X[m,a]^T @ Y[m,b], m >> a, b. TSMTTSM-style extension.
+    Differentiable."""
+    return _tsmt_diff(x, y, block_m, block_a, spec, interpret)
 
 
 def _ceil_mult(x: int, q: int) -> int:

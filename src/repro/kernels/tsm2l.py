@@ -33,7 +33,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _tsm2l_kernel(a_ref, b_ref, o_ref):
@@ -66,7 +67,7 @@ def tsm2l_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int,
         ],
         out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -31,7 +31,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _tsm2r_kernel(a_ref, b_ref, o_ref, acc_ref):
@@ -71,8 +72,8 @@ def tsm2r_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int, block_k: int,
         ],
         out_specs=pl.BlockSpec((block_m, n), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.VMEM((block_m, n), jnp.float32)],
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -27,7 +27,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _tsmt_kernel(x_ref, y_ref, o_ref, acc_ref):
@@ -69,8 +70,8 @@ def tsmt_pallas(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int, block_a: int,
         ],
         out_specs=pl.BlockSpec((block_a, b), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((a, b), x.dtype),
-        scratch_shapes=[pltpu.VMEM((block_a, b), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.VMEM((block_a, b), jnp.float32)],
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

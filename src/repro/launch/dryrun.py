@@ -187,7 +187,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
 
-    xla_cost = dict(compiled.cost_analysis())
+    xla_cost = analyze.xla_cost_dict(compiled)
     try:
         ma = compiled.memory_analysis()
         mem = {

@@ -5,6 +5,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod: 16x16 = 256 chips; multi-pod: 2 pods = 512 chips.
@@ -17,13 +19,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Tiny mesh over however many devices this host exposes (tests)."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((n // model, model), ("data", "model"))

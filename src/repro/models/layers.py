@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import tsmm
+
 
 import os
 
@@ -59,7 +61,27 @@ _dense_pg.defvjp(_dense_pg_fwd, _dense_pg_bwd)
 
 
 def dense(w, x):
-    return _dense_pg(w, x) if _PARAM_DTYPE_GRADS else _dense_raw(w, x)
+    """x @ w over the trailing dim of x.
+
+    Every model projection (QKV/out/MLP/LoRA/SSM in-out) lands here, so
+    this is where the tall-and-skinny dispatcher hooks into the train path:
+    activations flatten to (tokens, d_in) and go through ``tsmm``, which
+    routes to a TSM2X kernel when the shape qualifies (e.g. LoRA/PowerSGD
+    ranks, skinny heads at large token counts) and to the identical
+    ``dot_general`` otherwise -- including under a multi-chip SPMD mesh
+    context, where the dispatcher always defers to dense (pallas has no
+    GSPMD partitioning rule). ``REPRO_TSMM=off`` pins the dense path;
+    the flag is read at trace time, so A/B arms need separate jit caches.
+    The custom-VJP ``_dense_pg`` variant keeps precedence when
+    REPRO_BF16_PARAM_GRADS is set (it owns the backward dtype).
+    """
+    if _PARAM_DTYPE_GRADS:
+        return _dense_pg(w, x)
+    if tsmm.enabled():
+        x2 = x.reshape(-1, x.shape[-1])
+        out = tsmm.tsmm(x2, w)
+        return out.reshape(*x.shape[:-1], w.shape[-1])
+    return _dense_raw(w, x)
 
 
 # ---------------------------------------------------------------------------

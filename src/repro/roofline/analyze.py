@@ -100,16 +100,33 @@ def _split_computations(hlo: str) -> dict[str, str]:
     return comps
 
 
+_WHILE_RE = re.compile(
+    # The while operand may be a tuple-typed value with nested parens
+    # ("while((s32[], f32[...]) %tuple)"), so match lazily up to the
+    # "condition=/body=" attributes instead of assuming a flat "(...)"
+    # operand. Attribute order varies across backends; accept both.
+    r"while\(.*?\),\s*"
+    r"(?:condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)"
+    r"|body=%?([\w\.\-]+),\s*condition=%?([\w\.\-]+))")
+_KNOWN_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
+
+
 def _loop_multipliers(hlo: str, comps: dict[str, str]) -> dict[str, float]:
     """computation name -> execution multiplier from enclosing while loops."""
     mult = {name: 1.0 for name in comps}
-    # find while ops: body=%name, condition=%name
-    while_re = re.compile(r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
     edges = []
     for name, body in comps.items():
-        for m in while_re.finditer(body):
-            cond, wbody = m.group(1), m.group(2)
-            trip = _trip_count(comps.get(cond, ""))
+        for line in body.splitlines():
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond = m.group(1) or m.group(4)
+            wbody = m.group(2) or m.group(3)
+            # Prefer the compiler's own trip count when annotated
+            # (backend_config={"known_trip_count":{"n":...}}), else recover
+            # it from the loop-condition constant.
+            kt = _KNOWN_TRIP_RE.search(line)
+            trip = float(kt.group(1)) if kt else _trip_count(comps.get(cond, ""))
             edges.append((name, wbody, trip))
     # propagate multipliers (loops can nest; iterate to fixpoint, few passes)
     for _ in range(8):
@@ -148,9 +165,14 @@ def _trip_count(cond_body: str) -> float:
 
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*([a-z0-9]+)\[([\d,]*)\]")
 _PARAM_SIG_RE = re.compile(r"%?([\w\.\-]+)\s*:\s*([a-z0-9]+)\[([\d,]*)\]")
+# Operands may carry inline type annotations depending on the backend:
+# "dot(%a, %b)" or "dot(f32[32,64]{1,0} %a, f32[64,64]{1,0} %b)". When the
+# lhs annotation is present its dims are captured directly (group 3);
+# otherwise the lhs name (group 4) is resolved against the symbol table.
 _DOT_RE = re.compile(
-    r"=\s*([a-z0-9]+)\[([\d,]*)\][^\n]*?\bdot\(\s*%?([\w\.\-]+),\s*%?([\w\.\-]+)\)"
-    r",[^\n]*?lhs_contracting_dims=\{([\d,]*)\}")
+    r"=\s*([a-z0-9]+)\[([\d,]*)\][^\n]*?\bdot\(\s*"
+    r"(?:[a-z0-9]+\[([\d,]*)\](?:\{[\d,]*\})?\s+)?%?([\w\.\-]+),"
+    r"[^\n]*?lhs_contracting_dims=\{([\d,]*)\}")
 _OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
 
 
@@ -172,6 +194,28 @@ def _symbols(comp_body: str, comp_header: str = "") -> dict:
         if m:
             syms[m.group(1)] = (m.group(2), _shape_elems(m.group(3)))
     return syms
+
+
+def xla_cost_dict(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: always a flat dict.
+
+    Across JAX versions/backends ``cost_analysis()`` returns a dict, a
+    one-element list of dicts (one per partition), or raises on backends
+    without an implementation. Missing keys default to 0.0 so downstream
+    arithmetic never KeyErrors.
+    """
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:
+        cost = None
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    if not isinstance(cost, dict):
+        cost = {}
+    out = dict(cost)
+    out.setdefault("flops", 0.0)
+    out.setdefault("bytes accessed", 0.0)
+    return out
 
 
 def hlo_cost(hlo: str) -> dict:
@@ -212,13 +256,17 @@ def hlo_cost(hlo: str) -> dict:
         for m in _DOT_RE.finditer(body):
             res_elems = _shape_elems(m.group(2))
             contracted = 1
-            lhs_dims_m = re.search(
-                r"%" + re.escape(m.group(3)) + r"\s*=\s*[a-z0-9]+\[([\d,]*)\]",
-                body) or re.search(
-                re.escape(m.group(3)) + r"\s*:\s*[a-z0-9]+\[([\d,]*)\]",
-                headers.get(name, ""))
-            if lhs_dims_m and m.group(5).strip():
-                dims = [int(x) for x in lhs_dims_m.group(1).split(",") if x]
+            if m.group(3) is not None:
+                lhs_dims = m.group(3)
+            else:
+                lhs_dims_m = re.search(
+                    r"%" + re.escape(m.group(4)) + r"\s*=\s*[a-z0-9]+\[([\d,]*)\]",
+                    body) or re.search(
+                    re.escape(m.group(4)) + r"\s*:\s*[a-z0-9]+\[([\d,]*)\]",
+                    headers.get(name, ""))
+                lhs_dims = lhs_dims_m.group(1) if lhs_dims_m else ""
+            if lhs_dims and m.group(5).strip():
+                dims = [int(x) for x in lhs_dims.split(",") if x]
                 for ci in (int(x) for x in m.group(5).split(",") if x):
                     if ci < len(dims):
                         contracted *= dims[ci]

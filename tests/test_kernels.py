@@ -56,7 +56,10 @@ def test_tsm2r_block_sweep(bm, bk):
     a = _rand(jax.random.PRNGKey(0), (2048, 1024), jnp.float32)
     b = _rand(jax.random.PRNGKey(1), (1024, 8), jnp.float32)
     got = ops.tsm2r(a, b, block_m=bm, block_k=bk, interpret=True)
-    np.testing.assert_allclose(got, ref.tsm2r_ref(a, b), rtol=1e-5, atol=1e-5)
+    # rtol: blocked f32 accumulation (k/bk partial sums) reorders the long
+    # reduction vs the single-dot oracle; identical numerics ACROSS block
+    # shapes is covered by comparing every (bm, bk) to the same oracle.
+    np.testing.assert_allclose(got, ref.tsm2r_ref(a, b), rtol=1e-4, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

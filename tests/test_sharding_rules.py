@@ -8,14 +8,16 @@ jax.sharding.AbstractMesh (no real devices needed for spec logic)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import registry
 from repro.distributed import sharding
 from repro.models import model
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# AbstractMesh's signature drifted across JAX versions; construct through
+# the repo's compat path.
+MESH = sharding.abstract_mesh((16, 16), ("data", "model"))
+MESH3 = sharding.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _shapes(arch):
