@@ -10,23 +10,31 @@ from repro.core import perf_model, tsmm
 
 
 def run():
+    pol = tsmm.current_policy()
     rows = []
+    rows.append(("policy_mode", 0,
+                 f"mode={pol.mode};spec={pol.spec.name};"
+                 f"shard_map={pol.shard_map}"))
     rows.append(("t2_threshold_v5e_bf16",
                  round(perf_model.t2_threshold(dtype=jnp.bfloat16), 1),
                  "n below => memory-bound (all paper shapes)"))
     rows.append(("t2_threshold_v5e_f32",
                  round(perf_model.t2_threshold(dtype=jnp.float32), 1), ""))
+    rows.append(("t2_threshold_v5p_bf16",
+                 round(perf_model.t2_threshold(perf_model.V5P,
+                                               jnp.bfloat16), 1),
+                 "lower ridge: same shape can flip bound class across gens"))
     for (m, k, n) in [(20480, 20480, 2), (20480, 20480, 16), (30720, 30720, 8),
                       (15360, 15360, 16), (10_000_000, 16, 16), (102400, 4, 4),
                       (4096, 4096, 1024)]:
-        kind = tsmm.classify_gemm(m, k, n)
-        bound = perf_model.classify(m, k, n)
+        kind = tsmm.classify_gemm(m, k, n, pol)
+        bound = perf_model.classify(m, k, n, pol.spec)
         if kind == "tsm2r":
-            bm, bk = perf_model.choose_params_tsm2r(m, k, n)
+            bm, bk = perf_model.choose_params_tsm2r(m, k, n, pol.spec)
             vmem = perf_model.tsm2r_vmem_usage(bm, bk, n, jnp.bfloat16)
             det = f"bound={bound};bm={bm};bk={bk};vmem_kb={vmem//1024}"
         elif kind == "tsm2l":
-            bm = perf_model.choose_params_tsm2l(m, k, n)
+            bm = perf_model.choose_params_tsm2l(m, k, n, pol.spec)
             det = f"bound={bound};bm={bm}"
         else:
             det = f"bound={bound};dense-XLA path"

@@ -1,19 +1,94 @@
 """Benchmark orchestrator: one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--json BENCH_out.json]
+                                            [--sections SUBSTR]
 
-Prints ``name,us_per_call,derived`` CSV per section. The roofline tables
-(arch x shape cells) are produced separately by launch/dryrun.py +
-roofline_report.py since they need the 512-device placeholder runtime.
+Prints ``name,us_per_call,derived`` CSV per section. ``--json`` also writes
+a machine-readable report (per-section rows, bound classes for the
+canonical paper shapes, and the active GemmPolicy) so the perf trajectory
+can be tracked across PRs -- CI convention: ``BENCH_<rev>.json``.
+``--sections`` runs only sections whose title contains the substring.
+
+The roofline tables (arch x shape cells) are produced separately by
+launch/dryrun.py + roofline_report.py since they need the 512-device
+placeholder runtime.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
+# Canonical paper shapes whose classification is tracked in the JSON
+# report (paper cases (i)/(ii), the rect sweep anchor, and a dense control).
+CANONICAL_SHAPES = [
+    (20480, 20480, 2),
+    (20480, 20480, 16),
+    (30720, 30720, 8),
+    (102400, 4, 4),
+    (10_000_000, 16, 16),
+    (4096, 4096, 1024),
+]
 
-def main() -> None:
+
+def _num(x):
+    try:
+        return float(x)
+    except (TypeError, ValueError):
+        return None
+
+
+def build_report(section_results):
+    """Assemble the machine-readable report from
+    ``{title: ("ok"|"error", rows)}``. Pure function (tested)."""
+    import jax
+
+    from repro.core import perf_model, tsmm
+
+    pol = tsmm.current_policy()
+    report = {
+        "schema": "repro-tsm2x-bench/1",
+        "backend": jax.default_backend(),
+        "policy": {
+            "mode": pol.mode,
+            "spec": pol.spec.name,
+            "interpret": pol.interpret,
+            "shard_map": pol.shard_map,
+        },
+        "sections": {},
+        "classification": [],
+    }
+    for title, (status, rows) in section_results.items():
+        report["sections"][title] = {
+            "status": status,
+            "rows": [
+                {"name": str(r[0]),
+                 "us_per_call": _num(r[1]),
+                 "derived": str(r[2]) if len(r) > 2 else ""}
+                for r in rows
+            ],
+        }
+    for m, k, n in CANONICAL_SHAPES:
+        report["classification"].append({
+            "m": m, "k": k, "n": n,
+            "kind": tsmm.classify_gemm(m, k, n),
+            "kind_t": tsmm.classify_gemm_t(m, k, n),
+            "bound": perf_model.classify(m, k, n),
+            "policy_mode": pol.mode,
+        })
+    return report
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", dest="json_out", metavar="OUT.json",
+                    help="also write a machine-readable BENCH_*.json report")
+    ap.add_argument("--sections", metavar="SUBSTR",
+                    help="only run sections whose title contains SUBSTR")
+    args = ap.parse_args(argv)
+
     from benchmarks import (bench_ablation, bench_e2e, bench_params,
                             bench_rect, bench_tsm2l, bench_tsm2r)
     sections = [
@@ -24,14 +99,26 @@ def main() -> None:
         ("Fig6 ladder: V0->V3 ablation", bench_ablation.run),
         ("e2e: train/decode step throughput", bench_e2e.run),
     ]
+    if args.sections:
+        sections = [(t, fn) for t, fn in sections if args.sections in t]
+
     failures = 0
+    results = {}
     for title, fn in sections:
         print(f"\n# === {title} ===")
         try:
-            fn()
+            results[title] = ("ok", fn() or [])
         except Exception:
             failures += 1
+            results[title] = ("error", [])
             traceback.print_exc()
+
+    if args.json_out:
+        report = build_report(results)
+        with open(args.json_out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"\nwrote {args.json_out}")
+
     if failures:
         sys.exit(1)
 

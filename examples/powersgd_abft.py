@@ -13,10 +13,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import tsmm
 from repro.ft import abft
 from repro.optim import powersgd
 
 key = jax.random.PRNGKey(0)
+
+# One policy scope instead of threading interpret= through every call:
+# interpret mode pins the Pallas kernels to their Python bodies (CPU demo).
+POLICY = tsmm.GemmPolicy(interpret=True)
 
 # --- PowerSGD ---------------------------------------------------------------
 def spectral_grad(k, d1, d2, decay=0.5):
@@ -40,8 +45,9 @@ def fake_psum(x):   # MEAN over a 2-replica DP group with identical grads
     return (x + x) / 2.0
 
 
-out, state, metrics = powersgd.compress_tree(cfg, grads, state, psum=fake_psum,
-                                             interpret=True)
+with tsmm.policy(POLICY):
+    out, state, metrics = powersgd.compress_tree(cfg, grads, state,
+                                                 psum=fake_psum)
 dense_bytes = sum(g.size * 4 for g in jax.tree.leaves(grads))
 print(f"PowerSGD rank-4: compression ratio {metrics['powersgd_compression']:.1f}x "
       f"({dense_bytes/1e6:.1f} MB dense all-reduce -> "
@@ -53,11 +59,11 @@ print(f"  round-1 relative error {rel:.3f} on a decaying-spectrum gradient "
 
 # --- ABFT --------------------------------------------------------------------
 params = {"w": jax.random.normal(jax.random.fold_in(key, 3), (4096, 1024))}
-cs = abft.encode_tree(params, interpret=True)
-ok, _ = abft.verify_tree(params, cs, interpret=True)
+cs = abft.encode_tree(params, policy=POLICY)
+ok, _ = abft.verify_tree(params, cs, policy=POLICY)
 print(f"ABFT clean verify: {bool(ok)}")
 corrupt = {"w": params["w"].at[1234, 56].add(1.0)}   # one flipped value
-ok2, devs = abft.verify_tree(corrupt, cs, interpret=True)
+ok2, devs = abft.verify_tree(corrupt, cs, policy=POLICY)
 print(f"ABFT after single-element corruption: detected={not bool(ok2)}")
 assert bool(ok) and not bool(ok2)
 print("OK")

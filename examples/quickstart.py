@@ -3,8 +3,9 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Shows: shape-dispatched tall-and-skinny matmul (the paper's TSM2R/TSM2L),
-the transposed TSMT extension, the performance model's bound classifier,
-and kernel-vs-oracle validation (interpret mode on CPU).
+the transposed TSMT extension, batched N-d operands, the scoped GemmPolicy
+(dense A/B arm, hardware spec selection), the performance model's bound
+classifier, and kernel-vs-oracle validation (interpret mode on CPU).
 """
 
 import jax
@@ -43,6 +44,29 @@ q = tsmm.tsmm_t(x, y)                     # X^T Y without materializing X^T
 np.testing.assert_allclose(np.asarray(q), np.asarray(x.T @ y), rtol=1e-3,
                            atol=1e-3)
 print(f"TSMT  (65536x128)^T @ 65536x4 -> {q.shape}  (PowerSGD/ABFT shape)")
+
+# --- Batched N-d operands: tsmm owns the leading-dim collapse ---------------
+a4 = jax.random.normal(key, (8, 512, 4))          # (batch, m, k)
+c4 = tsmm.tsmm(a4, b2)                            # -> (8, 512, 4)
+np.testing.assert_allclose(np.asarray(c4),
+                           np.asarray(jnp.einsum("bmk,kn->bmn", a4, b2)),
+                           rtol=1e-3, atol=1e-3)
+print(f"batched {a4.shape} @ {b2.shape} -> {c4.shape} "
+      "(classified on the collapsed tall dim)")
+
+# --- GemmPolicy: every dispatch knob, lexically scoped ----------------------
+with tsmm.policy(mode="dense"):                   # the A/B escape hatch
+    c_dense = tsmm.tsmm(a2, b2)
+np.testing.assert_allclose(np.asarray(c_dense), np.asarray(c2), rtol=1e-3,
+                           atol=1e-3)
+with tsmm.policy(spec=perf_model.V5P):            # newer hardware generation
+    print(f"policy(spec=V5P): bound for 20480^2 x n=200 = "
+          f"{tsmm.bound_class(20480, 20480, 200)} "
+          f"(V5E: {perf_model.classify(20480, 20480, 200)})")
+with tsmm.record_dispatches() as log:             # the dispatch spy
+    tsmm.tsmm(a, b)
+print(f"dispatch spy: {log[0].kind} via {log[0].executor} "
+      f"for shape {log[0].shape}")
 
 # --- The performance model that drives block choice -------------------------
 bm, bk = perf_model.choose_params_tsm2r(20480, 20480, 16)

@@ -61,6 +61,35 @@ class TPUSpec:
 
 V5E = TPUSpec()
 
+# TPU v5p: the paper's core observation -- the winning variant flips with
+# hardware generation -- needs at least two generations on file. v5p's
+# flops/byte ridge (459/2765 ~ 166) sits well below v5e's (197/0.819 ~ 241),
+# so the same shape can change bound class between the two.
+V5P = TPUSpec(
+    name="tpu_v5p",
+    peak_flops_bf16=459e12,
+    peak_flops_f32=459e12 / 4,
+    hbm_bw=2765e9,
+    ici_bw_per_link=100e9,
+)
+
+SPECS: dict[str, TPUSpec] = {
+    "tpu_v5e": V5E,
+    "v5e": V5E,
+    "tpu_v5p": V5P,
+    "v5p": V5P,
+}
+
+
+def get_spec(name: str) -> TPUSpec:
+    """Look up a hardware spec by name (``GemmPolicy(spec=...)`` plumbing)."""
+    try:
+        return SPECS[name.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown TPU spec {name!r}: known specs are "
+            f"{sorted(SPECS)}") from None
+
 
 def bytes_per_elem(dtype) -> int:
     return jnp.dtype(dtype).itemsize

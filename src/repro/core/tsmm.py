@@ -1,4 +1,4 @@
-"""Shape-dispatched tall-and-skinny matmul: the framework's public GEMM entry.
+"""Shape-dispatched tall-and-skinny matmul behind a scoped ``GemmPolicy``.
 
 ``tsmm(a, b)`` inspects shapes against the perf model (paper Section 3.1.8's
 bound classifier) and routes to:
@@ -8,114 +8,598 @@ bound classifier) and routes to:
 * XLA ``dot_general`` otherwise (regular shapes belong on the stock MXU
   path -- the paper's observation that cuBLAS already wins there).
 
-``tsmm_t(x, y)`` is the transposed entry (X^T Y over a huge m).
+``tsmm_t(x, y)`` is the transposed entry (X^T Y over a huge m). Both accept
+N-d batched lhs operands: ``tsmm`` collapses the leading dims of a
+``(..., m, k)`` lhs into the tall dim, ``tsmm_t`` collapses them into the
+reduction, so call sites (``layers.dense``, PowerSGD, ABFT) never hand-roll
+reshapes.
 
-Dispatch is static (shapes are trace-time constants under jit), so choosing
-a path never introduces control flow into the compiled graph.
+Every knob that used to live in env vars and per-call kwargs is owned by an
+explicit, lexically scoped :class:`GemmPolicy`:
+
+    with tsmm.policy(mode="dense"):          # A/B arm: stock XLA everywhere
+        loss = train_step(state, batch)
+    with tsmm.policy(spec=perf_model.V5P, interpret=False):
+        out = serve_step(params, batch)
+
+Dispatch is static (shapes and the policy are trace-time constants under
+jit), so a jitted caller bakes the scoped policy into its cache entry --
+entering a different scope does NOT retroactively change already-compiled
+functions; A/B arms need separate jit caches exactly as before.
+
+Behind the policy sits a pluggable backend registry mapping a classified
+shape to an executor:
+
+* ``pallas-tpu``  -- the Mosaic kernels (interpret auto-detected off-TPU),
+* ``interpret``   -- the same kernels pinned to interpret mode,
+* ``dense-xla``   -- plain ``dot_general``,
+* ``shard_map``   -- wraps the dispatch per-shard over the data-parallel
+  mesh axes, so per-device shapes stay tall-and-skinny under DP. This
+  replaces the old hard guard that sent every call under a multi-chip
+  ``with mesh:`` scope to the dense path: when the tall dim divides the DP
+  axes and the per-shard shape still classifies tall-skinny, the kernels
+  now run per shard (``tsmm_t`` psums the per-shard partial products).
+
+``register_executor`` adds new backends; ``GemmPolicy.executor`` pins one.
 
 Both entries are differentiable: the ops they dispatch to carry custom_vjp
-rules whose backwards re-enter this dispatcher (the VJP of one tall-skinny
-class lands in another), and the dense fallback is a plain ``dot_general``.
-``REPRO_TSMM=off`` (also ``0``/``false``) forces every call onto the dense
-path -- the A/B escape hatch for benchmarking the kernels against stock XLA
-without touching call sites.
+rules that take the policy through their nondiff args, so the backward
+re-enters this dispatcher under the *caller's* scope (the VJP of one
+tall-skinny class lands in another).
+
+Legacy env vars still work as process-default aliases (deprecated):
+``REPRO_TSMM=off`` constructs the process default with ``mode="dense"`` and
+``REPRO_BF16_PARAM_GRADS=1`` with ``param_dtype_grads=True``. They are read
+once at import (never inside traced code); ``refresh_default_policy()``
+re-reads them.
 """
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
+import dataclasses
+import math
 import os
+import warnings
 
 import jax.numpy as jnp
 from jax import lax
+from jax.sharding import PartitionSpec
 
 from repro.core import perf_model
-from repro.kernels import ops
+from repro.kernels import compat, ops
 
-# A dim is "skinny" when this much smaller than its partner.
+__all__ = [
+    "GemmPolicy",
+    "policy",
+    "current_policy",
+    "default_policy",
+    "refresh_default_policy",
+    "backward_policy",
+    "classify_gemm",
+    "classify_gemm_t",
+    "tsmm",
+    "tsmm_t",
+    "bound_class",
+    "register_executor",
+    "unregister_executor",
+    "executors",
+    "record_dispatches",
+    "DispatchEvent",
+    "enabled",
+]
+
+# Classifier threshold defaults. These only seed the GemmPolicy fields
+# below -- dispatch always reads the policy, never these constants.
 SKINNY_RATIO = 16
-# Largest skinny dim we route to the custom kernels (past this the MXU
-# path's compute-bound efficiency beats the streaming formulation).
 MAX_SKINNY = 256
-# Smallest tall dim worth a custom kernel launch.
 MIN_TALL = 2048
+MAX_SKINNY_T = 512
+SKINNY_RATIO_T = SKINNY_RATIO // 4
+
+# The repo-wide convention for which mesh axes carry the batch
+# (distributed/sharding.dp_axes filters against this too). A policy can
+# override per scope via GemmPolicy.dp_axes.
+DP_AXIS_NAMES = ("pod", "data")
+
+_MM_KINDS = ("auto", "dense", "tsm2r", "tsm2l")
+_MMT_KINDS = ("auto", "dense", "tsmt")
+_ALL_MODES = ("auto", "dense", "tsm2r", "tsm2l", "tsmt")
+_SHARD_MAP_MODES = ("auto", "never", "require", "local")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPolicy:
+    """Everything the GEMM dispatcher is allowed to decide from.
+
+    Threshold fields (derivations against ``core/perf_model``, v5e/bf16):
+
+    * ``min_tall`` = 2048: below ~2048 tall rows the kernel's fixed costs
+      (``TPUSpec.dma_latency`` ~ 1us of pipeline prologue plus per-step
+      overhead) rival the whole modeled stream time
+      (2048 x 256 x 2 B / 819 GB/s ~ 1.3us) -- launching a custom kernel
+      cannot win.
+    * ``max_skinny`` = 256 (= 2 MXU lane tiles): past two 128-lane tiles of
+      output columns the generic MXU path's efficiency (n/128 per pass) is
+      high enough that the streaming formulation's bandwidth advantage is
+      gone.
+    * ``skinny_ratio`` = 16: a dim counts as skinny only when >= 16x smaller
+      than its partner; at milder aspect ratios the problem sits near the
+      roofline ridge where the stock path already streams close to peak.
+    * ``max_skinny_t`` = 512: the TSMT kernel keeps its (block_a, b) f32
+      accumulator as a single unblocked VMEM tile, and 512 is
+      ``t2_threshold(V5E, bf16)`` ~ 481 -- the paper's memory/compute
+      boundary -- rounded up to the next lane multiple: past it the problem
+      is compute-bound and belongs on the MXU path.
+    * ``skinny_ratio_t`` = ``skinny_ratio // 4`` = 4: the transposed entry
+      stays profitable at 4x milder aspect ratios because BOTH operands
+      stream over the same tall m exactly once (there is no per-m-block
+      B re-fetch term in ``tsmt_model_time``).
+
+    ``mode`` pins dispatch: "auto" classifies; "dense" forces the XLA path
+    everywhere; a kind name ("tsm2r"/"tsm2l" for ``tsmm``, "tsmt" for
+    ``tsmm_t``) forces that kernel for its own entry and leaves the other
+    entry on auto (so VJP re-dispatch stays shape-correct).
+
+    ``interpret``: tri-state Pallas interpret flag (None = auto-detect:
+    interpret off-TPU). ``spec``: the hardware model driving block-size
+    choice (see ``perf_model.SPECS``). ``param_dtype_grads``: emit parameter
+    gradients in the parameter dtype instead of f32 (halves per-device grad
+    memory under pure-DP/ZeRO-1; accumulation inside each dot stays f32).
+
+    ``shard_map``: "auto" wraps dispatch per-shard under a >1-device mesh
+    context when the tall dim divides the DP axes and the per-shard shape
+    still classifies tall-skinny (dense fallback otherwise, exactly the old
+    guard); "never" restores the old always-dense-under-mesh behavior;
+    "require" raises instead of falling back (tests/benchmarks); "local"
+    ignores the mesh context entirely and dispatches on the shapes as seen
+    -- what the shard_map executor sets for its per-shard bodies, and what
+    call sites inside their *own* shard_map should scope.
+    ``dp_axes``: mesh axis names carrying the batch; None = the repo
+    convention (``DP_AXIS_NAMES``, shared with ``distributed.sharding``).
+    ``executor``: pin a registered backend by name, bypassing selection.
+    """
+
+    mode: str = "auto"
+    spec: perf_model.TPUSpec = perf_model.V5E
+    skinny_ratio: int = SKINNY_RATIO
+    max_skinny: int = MAX_SKINNY
+    min_tall: int = MIN_TALL
+    max_skinny_t: int = MAX_SKINNY_T
+    skinny_ratio_t: int = SKINNY_RATIO_T
+    interpret: bool | None = None
+    param_dtype_grads: bool = False
+    shard_map: str = "auto"
+    dp_axes: tuple[str, ...] | None = None
+    executor: str | None = None
+
+    def __post_init__(self):
+        if self.mode not in _ALL_MODES:
+            raise ValueError(
+                f"unknown GemmPolicy mode {self.mode!r}: valid modes are "
+                f"{', '.join(_ALL_MODES)}")
+        if self.shard_map not in _SHARD_MAP_MODES:
+            raise ValueError(
+                f"unknown GemmPolicy shard_map {self.shard_map!r}: valid "
+                f"values are {', '.join(_SHARD_MAP_MODES)}")
+
+    def with_(self, **overrides) -> "GemmPolicy":
+        return dataclasses.replace(self, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# Process default (legacy env-var aliases) + lexical scoping
+# ---------------------------------------------------------------------------
+
+def _policy_from_env() -> GemmPolicy:
+    """Build the process-default policy from the deprecated env vars.
+
+    Called at import and from ``refresh_default_policy()`` only -- never
+    from traced code, so flipping an env var mid-process does nothing until
+    an explicit refresh (and even then only affects future traces).
+    """
+    kw = {}
+    raw = os.environ.get("REPRO_TSMM")
+    if raw is not None:
+        warnings.warn(
+            "REPRO_TSMM is deprecated; use `with tsmm.policy(mode=...)` or "
+            "tsmm.refresh_default_policy() after changing it",
+            DeprecationWarning, stacklevel=3)
+        if raw.lower() in ("off", "0", "false"):
+            kw["mode"] = "dense"
+    raw = os.environ.get("REPRO_BF16_PARAM_GRADS")
+    if raw is not None:
+        warnings.warn(
+            "REPRO_BF16_PARAM_GRADS is deprecated; use "
+            "`with tsmm.policy(param_dtype_grads=True)`",
+            DeprecationWarning, stacklevel=3)
+        if raw == "1":
+            kw["param_dtype_grads"] = True
+    return GemmPolicy(**kw)
+
+
+_DEFAULT_POLICY = _policy_from_env()
+_POLICY_VAR: contextvars.ContextVar[GemmPolicy | None] = \
+    contextvars.ContextVar("repro_gemm_policy", default=None)
+
+
+def default_policy() -> GemmPolicy:
+    """The process-default policy (env-var aliases applied)."""
+    return _DEFAULT_POLICY
+
+
+def refresh_default_policy() -> GemmPolicy:
+    """Re-read the legacy env vars into the process default (tests/tools)."""
+    global _DEFAULT_POLICY
+    _DEFAULT_POLICY = _policy_from_env()
+    return _DEFAULT_POLICY
+
+
+def current_policy() -> GemmPolicy:
+    """The innermost active ``with tsmm.policy(...)`` scope, else the
+    process default."""
+    return _POLICY_VAR.get() or _DEFAULT_POLICY
+
+
+@contextlib.contextmanager
+def policy(base: GemmPolicy | None = None, /, **overrides):
+    """Scope a dispatch policy: ``with tsmm.policy(mode="dense"): ...``.
+
+    ``base`` (positional) starts from an explicit GemmPolicy instead of the
+    current scope; keyword overrides are applied on top via
+    ``dataclasses.replace``. Scopes nest and restore on exit (also across
+    exceptions). The policy is captured at *trace* time: jit-compiled
+    callers keep the policy they were traced under.
+    """
+    p = base if base is not None else current_policy()
+    if overrides:
+        p = dataclasses.replace(p, **overrides)
+    token = _POLICY_VAR.set(p)
+    try:
+        yield p
+    finally:
+        _POLICY_VAR.reset(token)
+
+
+def backward_policy(p: GemmPolicy) -> GemmPolicy:
+    """Policy for VJP re-dispatch: keep the caller's scope (spec,
+    thresholds, interpret, a full-dense pin) but drop a forward-kind force
+    and any executor pin -- cotangent shapes classify for themselves, and
+    a pinned ``shard_map`` executor must not recurse per-shard."""
+    mode = p.mode if p.mode in ("auto", "dense") else "auto"
+    if mode == p.mode and p.executor is None:
+        return p
+    return dataclasses.replace(p, mode=mode, executor=None)
 
 
 def enabled() -> bool:
-    """False when REPRO_TSMM=off|0|false: every call takes the dense path.
-
-    Read at trace time, NOT at execution time: a jitted caller bakes the
-    choice into its cache entry, so flipping the env var does not affect
-    already-compiled functions. Each A/B arm needs a fresh process or a
-    ``jax.clear_caches()`` between runs.
-    """
-    return os.environ.get("REPRO_TSMM", "on").lower() not in ("off", "0", "false")
+    """Deprecated alias: True unless the current policy pins the dense
+    path (the old ``REPRO_TSMM=off`` check)."""
+    return current_policy().mode != "dense"
 
 
-def _spmd_mesh_active() -> bool:
-    """True inside a ``with mesh:`` scope spanning more than one device.
+# ---------------------------------------------------------------------------
+# Shape classification (thresholds owned by the policy)
+# ---------------------------------------------------------------------------
 
-    The Mosaic ``pallas_call`` custom call has no GSPMD partitioning rule,
-    so routing a global-jit SPMD computation into the kernels would at
-    best replicate the streamed operand per chip. Until a shard_map
-    wrapper lands (ROADMAP open item), kernel dispatch under a multi-chip
-    mesh context defers to the dense path, which GSPMD partitions fine.
-    ``force=`` still overrides (used by shard_map call sites that manage
-    their own partitioning).
-    """
-    try:
-        from jax._src import mesh as _mesh_mod
-        m = _mesh_mod.thread_resources.env.physical_mesh
-        return bool(m.axis_names) and m.size > 1
-    except Exception:
-        return False
-
-
-def classify_gemm(m: int, k: int, n: int) -> str:
+def classify_gemm(m: int, k: int, n: int,
+                  policy: GemmPolicy | None = None) -> str:
     """Return one of 'tsm2r' | 'tsm2l' | 'dense'."""
-    if m >= MIN_TALL and n <= MAX_SKINNY and m >= SKINNY_RATIO * n:
-        if k <= MAX_SKINNY:          # m >> k ~ n: tiny contraction
+    p = policy if policy is not None else current_policy()
+    if m >= p.min_tall and n <= p.max_skinny and m >= p.skinny_ratio * n:
+        if k <= p.max_skinny:              # m >> k ~ n: tiny contraction
             return "tsm2l"
-        if k >= SKINNY_RATIO * n:    # m ~ k >> n
+        if k >= p.skinny_ratio * n:        # m ~ k >> n
             return "tsm2r"
     return "dense"
 
 
-def classify_gemm_t(m: int, a_dim: int, b_dim: int) -> str:
-    """Transposed-entry classifier: 'tsmt' | 'dense' for X[m,a]^T Y[m,b]."""
-    if (m >= MIN_TALL and b_dim <= 512
-            and m >= SKINNY_RATIO * max(a_dim, b_dim) // 4):
+def classify_gemm_t(m: int, a_dim: int, b_dim: int,
+                    policy: GemmPolicy | None = None) -> str:
+    """Transposed-entry classifier: 'tsmt' | 'dense' for X[m,a]^T Y[m,b].
+
+    Thresholds (``max_skinny_t``, ``skinny_ratio_t``) are policy fields;
+    see the GemmPolicy docstring for their perf-model derivation.
+    """
+    p = policy if policy is not None else current_policy()
+    if (m >= p.min_tall and b_dim <= p.max_skinny_t
+            and m >= p.skinny_ratio_t * max(a_dim, b_dim)):
         return "tsmt"
     return "dense"
 
 
-def tsmm(a: jnp.ndarray, b: jnp.ndarray, *, interpret: bool | None = None,
-         force: str | None = None) -> jnp.ndarray:
-    """A[m,k] @ B[k,n] via the best path for the shape. Differentiable."""
-    m, k = a.shape
-    n = b.shape[1]
-    kind = force or (classify_gemm(m, k, n)
-                     if enabled() and not _spmd_mesh_active() else "dense")
+# ---------------------------------------------------------------------------
+# Dispatch spy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DispatchEvent:
+    """One routing decision: which entry, classified kind, chosen executor,
+    and the (tall, minor, minor) shape it was made for. Emitted at trace
+    time -- a cached jit call emits nothing."""
+
+    entry: str       # "mm" (A @ B) | "mmt" (X^T Y)
+    kind: str        # "tsm2r" | "tsm2l" | "tsmt" | "dense"
+    executor: str    # registry key
+    shape: tuple[int, int, int]
+
+
+_LISTENERS: list = []
+
+
+def _notify(entry: str, kind: str, executor: str, shape) -> None:
+    if _LISTENERS:
+        ev = DispatchEvent(entry, kind, executor, tuple(shape))
+        for cb in tuple(_LISTENERS):
+            cb(ev)
+
+
+@contextlib.contextmanager
+def record_dispatches():
+    """Collect DispatchEvents for every routing decision in the scope --
+    including per-shard re-dispatch inside the shard_map executor."""
+    log: list[DispatchEvent] = []
+    _LISTENERS.append(log.append)
+    try:
+        yield log
+    finally:
+        _LISTENERS.remove(log.append)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+#
+# An executor is ``fn(entry, kind, a, b, policy) -> array``. The dispatcher
+# hands kernel executors 2-D operands (N-d lhs already collapsed); only
+# "dense-xla" may receive the original N-d lhs for the "mm" entry (its
+# dot_general contracts the trailing dim without a reshape, which matters
+# under GSPMD).
+
+_EXECUTORS: dict = {}
+
+
+def register_executor(name: str, fn, *, overwrite: bool = False):
+    """Register a backend. Returns ``fn`` (usable as a decorator factory)."""
+    if name in _EXECUTORS and not overwrite:
+        raise ValueError(f"executor {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _EXECUTORS[name] = fn
+    return fn
+
+
+def unregister_executor(name: str) -> None:
+    """Remove a registered backend (built-ins included -- caveat emptor)."""
+    _EXECUTORS.pop(name, None)
+
+
+def executors() -> dict:
+    """Snapshot of the registry (name -> executor)."""
+    return dict(_EXECUTORS)
+
+
+def _exec_dense_xla(entry, kind, a, b, p):
+    del kind, p
+    if entry == "mm":
+        out = lax.dot_general(a, b, (((a.ndim - 1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    else:
+        out = lax.dot_general(a, b, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return out.astype(a.dtype)
+
+
+def _exec_pallas(entry, kind, a, b, p):
     if kind == "tsm2r":
-        return ops.tsm2r(a, b, interpret=interpret)
+        return ops.tsm2r(a, b, policy=p)
     if kind == "tsm2l":
-        return ops.tsm2l(a, b, interpret=interpret)
-    return lax.dot_general(a, b, (((1,), (0,)), ((), ())),
-                           preferred_element_type=jnp.float32).astype(a.dtype)
-
-
-def tsmm_t(x: jnp.ndarray, y: jnp.ndarray, *, interpret: bool | None = None,
-           force: str | None = None) -> jnp.ndarray:
-    """X[m,a]^T @ Y[m,b] via TSMT when m is huge and a, b small-ish.
-    Differentiable."""
-    m, a_dim = x.shape
-    b_dim = y.shape[1]
-    kind = force or (classify_gemm_t(m, a_dim, b_dim)
-                     if enabled() and not _spmd_mesh_active() else "dense")
+        return ops.tsm2l(a, b, policy=p)
     if kind == "tsmt":
-        return ops.tsmt(x, y, interpret=interpret)
-    return lax.dot_general(x, y, (((0,), (0,)), ((), ())),
-                           preferred_element_type=jnp.float32).astype(x.dtype)
+        return ops.tsmt(a, b, policy=p)
+    return _exec_dense_xla(entry, kind, a, b, p)
 
 
-def bound_class(m: int, k: int, n: int, dtype=jnp.bfloat16) -> perf_model.Bound:
-    return perf_model.classify(m, k, n, perf_model.V5E, dtype)
+def _exec_interpret(entry, kind, a, b, p):
+    return _exec_pallas(entry, kind, a, b,
+                        dataclasses.replace(p, interpret=True))
+
+
+def _dp_axes(mesh, p: GemmPolicy) -> tuple[str, ...]:
+    names = p.dp_axes if p.dp_axes is not None else DP_AXIS_NAMES
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def _axes_size(mesh, axes) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _exec_shard_map(entry, kind, a, b, p):
+    """Per-shard dispatch over the DP axes of the context mesh.
+
+    ``mm``: the tall dim shards, B replicates; each shard re-enters the
+    dispatcher on its local (still tall-skinny) shape. ``mmt``: both
+    operands shard over the tall reduction; per-shard partial products are
+    psum'd (the output is replicated). The inner policy disables shard_map
+    so per-shard re-dispatch cannot recurse.
+    """
+    del kind
+    mesh = compat.get_context_mesh()
+    if mesh is None:
+        raise RuntimeError("shard_map executor requires an active "
+                           "`with mesh:` scope")
+    dp = _dp_axes(mesh, p)
+    if not dp:
+        raise RuntimeError(
+            f"shard_map executor found no data-parallel axes on mesh "
+            f"{mesh.axis_names} (policy dp_axes={p.dp_axes})")
+    inner = dataclasses.replace(p, shard_map="local", executor=None)
+    if entry == "mm":
+        f = compat.shard_map(
+            lambda a_s, b_s: tsmm(a_s, b_s, policy=inner),
+            mesh=mesh,
+            in_specs=(PartitionSpec(dp, None), PartitionSpec(None, None)),
+            out_specs=PartitionSpec(dp, None))
+        return f(a, b)
+    f = compat.shard_map(
+        lambda x_s, y_s: lax.psum(tsmm_t(x_s, y_s, policy=inner), dp),
+        mesh=mesh,
+        in_specs=(PartitionSpec(dp, None), PartitionSpec(dp, None)),
+        out_specs=PartitionSpec(None, None))
+    return f(a, b)
+
+
+register_executor("dense-xla", _exec_dense_xla)
+register_executor("pallas-tpu", _exec_pallas)
+register_executor("interpret", _exec_interpret)
+register_executor("shard_map", _exec_shard_map)
+
+
+# ---------------------------------------------------------------------------
+# Executor selection
+# ---------------------------------------------------------------------------
+
+def _select_executor(entry: str, kind: str, m_tall: int, d1: int, d2: int,
+                     p: GemmPolicy, forced: bool) -> str:
+    if p.executor is not None:
+        if p.executor not in _EXECUTORS:
+            raise ValueError(
+                f"GemmPolicy.executor {p.executor!r} is not registered: "
+                f"known executors are {sorted(_EXECUTORS)}")
+        return p.executor
+    if kind == "dense":
+        return "dense-xla"
+    mesh = compat.get_context_mesh()
+    if (mesh is not None and mesh.size > 1 and not forced
+            and p.shard_map != "local"):
+        # pallas_call has no GSPMD partitioning rule: under a multi-chip
+        # mesh the kernels only run per-shard (shard_map) or not at all.
+        # A forced kind or a shard_map="local" scope bypasses this branch
+        # -- call sites inside their own shard_map manage partitioning
+        # themselves (the shard_map executor's bodies do exactly that).
+        if p.shard_map == "never":
+            return "dense-xla"
+        dp = _dp_axes(mesh, p)
+        shards = _axes_size(mesh, dp) if dp else 0
+        ok = bool(dp) and m_tall % shards == 0
+        if ok:
+            local = (classify_gemm(m_tall // shards, d1, d2, p)
+                     if entry == "mm"
+                     else classify_gemm_t(m_tall // shards, d1, d2, p))
+            ok = local != "dense"
+        if ok:
+            return "shard_map"
+        if p.shard_map == "require":
+            raise RuntimeError(
+                f"GemmPolicy(shard_map='require') but shape "
+                f"({m_tall}, {d1}, {d2}) cannot shard over dp axes "
+                f"{dp or '(none)'} of mesh {dict(mesh.shape)}")
+        return "dense-xla"
+    if p.interpret:
+        return "interpret"
+    return "pallas-tpu"
+
+
+def _forced_kind(entry: str, mode: str | None, force: str | None,
+                 p: GemmPolicy) -> str | None:
+    """Resolve per-call mode/force plus the policy mode into a pinned kind
+    (or None for auto). Per-call values are validated strictly; a policy
+    mode pinning the *other* entry's kind degrades to auto here so VJP
+    re-dispatch under a force-kind scope stays shape-correct."""
+    valid = _MM_KINDS if entry == "mm" else _MMT_KINDS
+    if mode is not None and force is not None and mode != force:
+        raise ValueError("pass only one of mode= / force= (force is the "
+                         "deprecated alias)")
+    req = mode if mode is not None else force
+    if req is not None:
+        if req not in valid:
+            raise ValueError(
+                f"unknown kind {req!r} for {'tsmm' if entry == 'mm' else 'tsmm_t'}: "
+                f"valid kinds are {', '.join(valid)}")
+        return None if req == "auto" else req
+    if p.mode != "auto" and p.mode in valid:
+        return p.mode
+    return None
+
+
+def _resolve_policy(policy_: GemmPolicy | None,
+                    interpret: bool | None) -> GemmPolicy:
+    p = policy_ if policy_ is not None else current_policy()
+    if interpret is not None and interpret != p.interpret:
+        p = dataclasses.replace(p, interpret=interpret)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Public entries
+# ---------------------------------------------------------------------------
+
+def tsmm(a: jnp.ndarray, b: jnp.ndarray, *, mode: str | None = None,
+         policy: GemmPolicy | None = None, interpret: bool | None = None,
+         force: str | None = None) -> jnp.ndarray:
+    """``A[..., m, k] @ B[k, n]`` via the best path for the shape.
+
+    Leading dims of ``a`` collapse into the tall dim for kernel dispatch
+    (classification sees ``prod(a.shape[:-1])``); the dense path contracts
+    the trailing dim in place, reshape-free. Differentiable. ``mode``
+    overrides classification per call ("auto"/"dense"/"tsm2r"/"tsm2l";
+    unknown kinds raise); ``force`` and ``interpret`` are deprecated
+    aliases for ``mode`` and the policy's interpret field.
+    """
+    p = _resolve_policy(policy, interpret)
+    if a.ndim < 2 or b.ndim != 2:
+        raise ValueError(
+            f"tsmm expects a (..., m, k) lhs and a (k, n) rhs; got "
+            f"{a.shape} @ {b.shape}")
+    k = a.shape[-1]
+    if b.shape[0] != k:
+        raise ValueError(f"tsmm contraction mismatch: {a.shape} @ {b.shape}")
+    n = b.shape[1]
+    m_tall = math.prod(a.shape[:-1])
+    forced = _forced_kind("mm", mode, force, p)
+    kind = forced if forced is not None else classify_gemm(m_tall, k, n, p)
+    name = _select_executor("mm", kind, m_tall, k, n, p, forced is not None)
+    _notify("mm", kind, name, (m_tall, k, n))
+    ex = _EXECUTORS[name]
+    if a.ndim > 2 and name != "dense-xla":
+        out = ex("mm", kind, a.reshape(m_tall, k), b, p)
+        return out.reshape(*a.shape[:-1], n)
+    return ex("mm", kind, a, b, p)
+
+
+def tsmm_t(x: jnp.ndarray, y: jnp.ndarray, *, mode: str | None = None,
+           policy: GemmPolicy | None = None, interpret: bool | None = None,
+           force: str | None = None) -> jnp.ndarray:
+    """``X[..., m, a]^T @ Y[..., m, b] -> (a, b)`` via TSMT when the
+    reduction is huge and a, b small-ish.
+
+    Leading dims (shared by both operands) collapse into the reduction, so
+    batched cotangents reduce in one pass. Differentiable. ``mode`` accepts
+    "auto"/"dense"/"tsmt" (unknown kinds raise).
+    """
+    p = _resolve_policy(policy, interpret)
+    if x.ndim < 2 or x.ndim != y.ndim or x.shape[:-1] != y.shape[:-1]:
+        raise ValueError(
+            f"tsmm_t expects (..., m, a) and (..., m, b) with identical "
+            f"leading dims; got {x.shape} and {y.shape}")
+    a_dim, b_dim = x.shape[-1], y.shape[-1]
+    m_tall = math.prod(x.shape[:-1])
+    if x.ndim > 2:
+        x = x.reshape(m_tall, a_dim)
+        y = y.reshape(m_tall, b_dim)
+    forced = _forced_kind("mmt", mode, force, p)
+    kind = (forced if forced is not None
+            else classify_gemm_t(m_tall, a_dim, b_dim, p))
+    name = _select_executor("mmt", kind, m_tall, a_dim, b_dim, p,
+                            forced is not None)
+    _notify("mmt", kind, name, (m_tall, a_dim, b_dim))
+    return _EXECUTORS[name]("mmt", kind, x, y, p)
+
+
+def bound_class(m: int, k: int, n: int, dtype=jnp.bfloat16,
+                policy: GemmPolicy | None = None) -> perf_model.Bound:
+    p = policy if policy is not None else current_policy()
+    return perf_model.classify(m, k, n, p.spec, dtype)

@@ -28,6 +28,7 @@ import re
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import tsmm
 from repro.kernels import compat
 
 FSDP_THRESHOLD = 30e9
@@ -40,7 +41,7 @@ def abstract_mesh(axis_sizes, axis_names):
 
 
 def dp_axes(mesh: Mesh):
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return tuple(a for a in tsmm.DP_AXIS_NAMES if a in mesh.axis_names)
 
 
 def _axis_size(mesh: Mesh, axis) -> int:
@@ -270,13 +271,9 @@ def cache_specs(cfg, mesh: Mesh, cache_shape):
 
 def _context_mesh():
     """The `with mesh:` context mesh, or None (abstract mesh is empty under
-    plain `with mesh:` -- must read the physical thread resources)."""
-    try:
-        from jax._src import mesh as _mesh_mod
-        m = _mesh_mod.thread_resources.env.physical_mesh
-        return m if m.axis_names else None
-    except Exception:
-        return None
+    plain `with mesh:` -- the compat shim reads the physical thread
+    resources through the public interpreters API)."""
+    return compat.get_context_mesh()
 
 
 def maybe_wsc_spec(x, spec):

@@ -35,34 +35,40 @@ def _checksum_weights(d1: int, s: int = 2) -> jnp.ndarray:
     return jnp.stack(cols[:s], axis=1)
 
 
-def encode_leaf(x, s: int = 2, *, interpret=None):
-    """Checksum of one 2-D (or reshaped) array: (cols, s) f32."""
+def encode_leaf(x, s: int = 2, *, policy=None, interpret=None):
+    """Checksum of one 2-D (or reshaped) array: (cols, s) f32.
+
+    ``policy`` pins a GemmPolicy for the TSMT pass (defaults to the active
+    ``tsmm.policy(...)`` scope); ``interpret=`` is the deprecated alias.
+    """
     m = x.reshape(x.shape[0], -1) if x.ndim != 2 else x
     if m.ndim == 1:
         m = m[:, None]
     e = _checksum_weights(m.shape[0], s)
     # c[s_, cols] via TSMT: e^T m  -> orient as tsmm_t(m_as_x? ...): we use
     # tsmm_t(e_like? ) -- X^T Y with X=m (m rows huge) gives (cols, s):
-    return tsmm.tsmm_t(m.astype(jnp.float32), e, interpret=interpret)
+    return tsmm.tsmm_t(m.astype(jnp.float32), e, policy=policy,
+                       interpret=interpret)
 
 
-def encode_tree(tree, s: int = 2, *, interpret=None):
+def encode_tree(tree, s: int = 2, *, policy=None, interpret=None):
     """Checksums for every leaf with >= 2 dims and >= 2^16 elements."""
     def one(x):
         if x.ndim < 1 or x.size < 65536:
             return None
-        return encode_leaf(x, s, interpret=interpret)
+        return encode_leaf(x, s, policy=policy, interpret=interpret)
     return jax.tree.map(one, tree)
 
 
-def verify_tree(tree, checksums, *, rtol: float = 1e-3, interpret=None):
+def verify_tree(tree, checksums, *, rtol: float = 1e-3, policy=None,
+                interpret=None):
     """Returns (ok: bool array, per-leaf max relative deviation tree)."""
     devs = []
 
     def one(x, c):
         if c is None:
             return None
-        c2 = encode_leaf(x, c.shape[1], interpret=interpret)
+        c2 = encode_leaf(x, c.shape[1], policy=policy, interpret=interpret)
         denom = jnp.maximum(jnp.abs(c), 1e-6)
         dev = jnp.max(jnp.abs(c2 - c) / denom)
         devs.append(dev)

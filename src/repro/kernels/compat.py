@@ -26,6 +26,15 @@ Shims and the version ranges they cover:
   ``axis_types`` kwarg (and ``jax.sharding.AxisType``) in 0.5; on 0.4.3x
   the kwarg does not exist and Auto is the only behavior. The helper
   passes explicit-Auto types only where the installed JAX has them.
+* ``get_context_mesh()`` -- the ``with mesh:`` context mesh, read through
+  the public ``jax.interpreters.pxla`` surface (the dispatcher must never
+  import ``jax._src``). Returns None outside a mesh scope.
+* ``shard_map(...)`` -- lived in ``jax.experimental.shard_map`` through
+  0.5.x and moved to ``jax.shard_map`` later; ``check_rep`` was also
+  renamed away. The wrapper takes the modern keyword signature and drops
+  kwargs the installed JAX rejects.
+* ``auto_interpret()`` -- the Pallas interpret-mode default: kernel bodies
+  run in Python off-TPU (correctness on CPU), compile via Mosaic on TPU.
 
 The probes are trace-time only (``jax.eval_shape``): importing this module
 never compiles or executes device code.
@@ -44,7 +53,15 @@ __all__ = [
     "make_mesh",
     "optimization_barrier",
     "BARRIER_IS_DIFFERENTIABLE",
+    "get_context_mesh",
+    "shard_map",
+    "auto_interpret",
 ]
+
+
+def auto_interpret() -> bool:
+    """Pallas interpret-mode default: Python bodies off-TPU, Mosaic on TPU."""
+    return jax.default_backend() != "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +115,71 @@ def make_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]):
         return jax.make_mesh(shape, axis_names,
                              axis_types=(axis_type.Auto,) * len(axis_names))
     return jax.make_mesh(shape, axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-context introspection + shard_map
+# ---------------------------------------------------------------------------
+
+def _resolve_thread_resources():
+    """Probe the public pxla re-export once at import. A failed probe is a
+    version-drift event worth a warning, NOT silently equivalent to
+    "no mesh active": the dispatcher's multi-chip guard depends on it."""
+    try:
+        from jax.interpreters import pxla
+        pxla.thread_resources.env.physical_mesh  # full attribute path
+        return pxla.thread_resources
+    except Exception:  # pragma: no cover - future-JAX drift
+        import warnings
+        warnings.warn(
+            "jax.interpreters.pxla.thread_resources is unavailable on this "
+            "JAX; mesh-context detection (and the tsmm multi-chip dispatch "
+            "guard) is disabled -- extend repro.kernels.compat for this "
+            "version", RuntimeWarning, stacklevel=2)
+        return None
+
+
+_THREAD_RESOURCES = _resolve_thread_resources()
+
+
+def get_context_mesh():
+    """The active ``with mesh:`` context mesh, or None outside one.
+
+    Read through ``jax.interpreters.pxla`` (public re-export) -- the
+    abstract mesh is empty under a plain ``with mesh:`` scope, so the
+    physical thread resources are the only reliable signal across the
+    covered JAX versions.
+    """
+    if _THREAD_RESOURCES is None:
+        return None
+    m = _THREAD_RESOURCES.env.physical_mesh
+    return m if m.axis_names else None
+
+
+def _resolve_shard_map():
+    try:
+        from jax.experimental.shard_map import shard_map as f  # <= 0.5.x
+        return f
+    except ImportError:  # pragma: no cover - moved in newer JAX
+        from jax import shard_map as f
+        return f
+
+
+_SHARD_MAP = _resolve_shard_map()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, on every covered JAX.
+
+    ``check_rep=False`` keeps psum-producing bodies legal on 0.4.x/0.5.x;
+    newer JAX renamed/removed the kwarg, so it is dropped on TypeError.
+    """
+    try:
+        return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:  # pragma: no cover - post-rename JAX
+        return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
 
 
 # ---------------------------------------------------------------------------

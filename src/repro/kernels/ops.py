@@ -1,41 +1,44 @@
 """Public jit'd entry points for the TSM2X kernels.
 
-Handles: block-size selection (perf model), padding to block multiples
-(zero-padding is exact for GEMM), interpret-mode auto-detection (CPU runs
-the kernel bodies in Python for correctness; TPU compiles via Mosaic), and
-lane-dim padding of skinny minor dims when lowering for real TPUs.
+Handles: block-size selection (perf model, driven by ``GemmPolicy.spec``),
+padding to block multiples (zero-padding is exact for GEMM), interpret-mode
+resolution (policy field; auto-detect runs kernel bodies in Python on CPU
+and compiles via Mosaic on TPU), and lane-dim padding of skinny minor dims
+when lowering for real TPUs.
 
-All three entries carry ``jax.custom_vjp`` rules whose backwards re-dispatch
-through ``repro.core.tsmm`` -- the paper's central observation applied to
-autodiff: the VJP of one tall-and-skinny GEMM class lands in another.
+All three entries carry ``jax.custom_vjp`` rules that take the resolved
+``GemmPolicy`` through their nondiff args, so the backward re-enters
+``repro.core.tsmm`` under the *caller's* scope -- the paper's central
+observation applied to autodiff: the VJP of one tall-and-skinny GEMM class
+lands in another.
 
     tsm2r/tsm2l:  C = A B        Abar = Chat B^T   (TSM2L-shaped for TSM2L)
                                  Bbar = A^T Chat   (TSMTTSM shape -> tsmt)
     tsmt:         C = X^T Y      Xbar = Y Chat^T   (TSM2L-shaped)
                                  Ybar = X Chat     (TSM2L-shaped)
 
-Routing goes through ``tsmm.classify_gemm`` / ``tsmm.classify_gemm_t``, so
-gradients stay inside the tall-skinny regime instead of falling back to XLA
-dense dots; shapes that leave the regime degrade to ``dot_general`` exactly
-like the forward dispatcher does.
+Routing goes through ``tsmm.classify_gemm`` / ``tsmm.classify_gemm_t`` with
+the scoped thresholds, so gradients stay inside the tall-skinny regime
+instead of falling back to XLA dense dots; shapes that leave the regime
+degrade to ``dot_general`` exactly like the forward dispatcher does.
+
+``spec=`` / ``interpret=`` kwargs are kept as per-call overrides of the
+corresponding policy fields (prefer ``with tsmm.policy(...)`` scopes).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import perf_model
-from repro.kernels import ref
+from repro.kernels import compat, ref
 from repro.kernels.tsm2l import tsm2l_pallas
 from repro.kernels.tsm2r import tsm2r_pallas
 from repro.kernels.tsmt import tsmt_pallas
-
-
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -55,17 +58,32 @@ def _dispatcher():
     return tsmm
 
 
+def _effective_policy(policy, spec, interpret):
+    """The caller's policy with legacy per-call kwargs folded in."""
+    p = policy if policy is not None else _dispatcher().current_policy()
+    repl = {}
+    if spec is not None and spec is not p.spec:
+        repl["spec"] = spec
+    if interpret is not None and interpret != p.interpret:
+        repl["interpret"] = interpret
+    return dataclasses.replace(p, **repl) if repl else p
+
+
+def _resolve_interpret(policy) -> bool:
+    return (compat.auto_interpret() if policy.interpret is None
+            else policy.interpret)
+
+
 # ---------------------------------------------------------------------------
 # TSM2R
 # ---------------------------------------------------------------------------
 
-def _tsm2r_impl(a, b, block_m, block_k, spec, interpret):
+def _tsm2r_impl(a, b, block_m, block_k, policy):
     m, k = a.shape
     n = b.shape[1]
-    if interpret is None:
-        interpret = _auto_interpret()
+    interpret = _resolve_interpret(policy)
     if block_m is None or block_k is None:
-        bm, bk = perf_model.choose_params_tsm2r(m, k, n, spec, a.dtype)
+        bm, bk = perf_model.choose_params_tsm2r(m, k, n, policy.spec, a.dtype)
         block_m = block_m or bm
         block_k = block_k or bk
     block_m = min(block_m, _ceil_mult(m, 8))
@@ -77,24 +95,25 @@ def _tsm2r_impl(a, b, block_m, block_k, spec, interpret):
     return out[:m]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _tsm2r_diff(a, b, block_m, block_k, spec, interpret):
-    return _tsm2r_impl(a, b, block_m, block_k, spec, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _tsm2r_diff(a, b, block_m, block_k, policy):
+    return _tsm2r_impl(a, b, block_m, block_k, policy)
 
 
-def _tsm2r_fwd(a, b, block_m, block_k, spec, interpret):
-    return _tsm2r_impl(a, b, block_m, block_k, spec, interpret), (a, b)
+def _tsm2r_fwd(a, b, block_m, block_k, policy):
+    return _tsm2r_impl(a, b, block_m, block_k, policy), (a, b)
 
 
-def _tsm2r_bwd(block_m, block_k, spec, interpret, res, ct):
+def _tsm2r_bwd(block_m, block_k, policy, res, ct):
     a, b = res
     tsmm = _dispatcher()
+    bp = tsmm.backward_policy(policy)
     # Abar[m,k] = Chat[m,n] B^T[n,k]: tiny contraction; TSM2L-shaped when
     # k is small, dense when k ~ m (the TSM2R case) -- classifier decides.
-    da = tsmm.tsmm(ct, b.T, interpret=interpret)
+    da = tsmm.tsmm(ct, b.T, policy=bp)
     # Bbar[k,n] = A^T[k,m] Chat[m,n]: reduction over tall m -- the TSMTTSM
     # shape (Ernst et al.), dispatched via classify_gemm_t.
-    db = tsmm.tsmm_t(a, ct, interpret=interpret)
+    db = tsmm.tsmm_t(a, ct, policy=bp)
     return da.astype(a.dtype), db.astype(b.dtype)
 
 
@@ -102,45 +121,48 @@ _tsm2r_diff.defvjp(_tsm2r_fwd, _tsm2r_bwd)
 
 
 def tsm2r(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
-          block_k: int | None = None, spec: perf_model.TPUSpec = perf_model.V5E,
-          interpret: bool | None = None) -> jnp.ndarray:
+          block_k: int | None = None,
+          spec: perf_model.TPUSpec | None = None,
+          interpret: bool | None = None,
+          policy=None) -> jnp.ndarray:
     """C[m,n] = A[m,k] @ B[k,n], m ~ k >> n. Paper's TSM2R. Differentiable."""
-    return _tsm2r_diff(a, b, block_m, block_k, spec, interpret)
+    p = _effective_policy(policy, spec, interpret)
+    return _tsm2r_diff(a, b, block_m, block_k, p)
 
 
 # ---------------------------------------------------------------------------
 # TSM2L
 # ---------------------------------------------------------------------------
 
-def _tsm2l_impl(a, b, block_m, spec, interpret):
+def _tsm2l_impl(a, b, block_m, policy):
     m, k = a.shape
     n = b.shape[1]
-    if interpret is None:
-        interpret = _auto_interpret()
+    interpret = _resolve_interpret(policy)
     if block_m is None:
-        block_m = perf_model.choose_params_tsm2l(m, k, n, spec, a.dtype)
+        block_m = perf_model.choose_params_tsm2l(m, k, n, policy.spec, a.dtype)
     block_m = min(block_m, _ceil_mult(m, 8))
     a_p = _pad_to(a, 0, block_m)
     out = tsm2l_pallas(a_p, b, block_m=block_m, interpret=interpret)
     return out[:m]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _tsm2l_diff(a, b, block_m, spec, interpret):
-    return _tsm2l_impl(a, b, block_m, spec, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _tsm2l_diff(a, b, block_m, policy):
+    return _tsm2l_impl(a, b, block_m, policy)
 
 
-def _tsm2l_fwd(a, b, block_m, spec, interpret):
-    return _tsm2l_impl(a, b, block_m, spec, interpret), (a, b)
+def _tsm2l_fwd(a, b, block_m, policy):
+    return _tsm2l_impl(a, b, block_m, policy), (a, b)
 
 
-def _tsm2l_bwd(block_m, spec, interpret, res, ct):
+def _tsm2l_bwd(block_m, policy, res, ct):
     a, b = res
     tsmm = _dispatcher()
+    bp = tsmm.backward_policy(policy)
     # Abar[m,k] = Chat[m,n] B^T[n,k]: m >> n ~ k -- exactly TSM2L again.
-    da = tsmm.tsmm(ct, b.T, interpret=interpret)
+    da = tsmm.tsmm(ct, b.T, policy=bp)
     # Bbar[k,n] = A^T Chat: tall-m reduction -> TSMT.
-    db = tsmm.tsmm_t(a, ct, interpret=interpret)
+    db = tsmm.tsmm_t(a, ct, policy=bp)
     return da.astype(a.dtype), db.astype(b.dtype)
 
 
@@ -148,23 +170,25 @@ _tsm2l_diff.defvjp(_tsm2l_fwd, _tsm2l_bwd)
 
 
 def tsm2l(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
-          spec: perf_model.TPUSpec = perf_model.V5E,
-          interpret: bool | None = None) -> jnp.ndarray:
+          spec: perf_model.TPUSpec | None = None,
+          interpret: bool | None = None,
+          policy=None) -> jnp.ndarray:
     """C[m,n] = A[m,k] @ B[k,n], m >> k ~ n. Paper's TSM2L. Differentiable."""
-    return _tsm2l_diff(a, b, block_m, spec, interpret)
+    p = _effective_policy(policy, spec, interpret)
+    return _tsm2l_diff(a, b, block_m, p)
 
 
 # ---------------------------------------------------------------------------
 # TSMT
 # ---------------------------------------------------------------------------
 
-def _tsmt_impl(x, y, block_m, block_a, spec, interpret):
+def _tsmt_impl(x, y, block_m, block_a, policy):
     m, a_dim = x.shape
     b_dim = y.shape[1]
-    if interpret is None:
-        interpret = _auto_interpret()
+    interpret = _resolve_interpret(policy)
     if block_m is None or block_a is None:
-        bm, ba = perf_model.choose_params_tsmt(m, a_dim, b_dim, spec, x.dtype)
+        bm, ba = perf_model.choose_params_tsmt(m, a_dim, b_dim, policy.spec,
+                                               x.dtype)
         block_m = block_m or bm
         block_a = block_a or ba
     block_m = min(block_m, _ceil_mult(m, 8))
@@ -176,22 +200,23 @@ def _tsmt_impl(x, y, block_m, block_a, spec, interpret):
     return out[:a_dim]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _tsmt_diff(x, y, block_m, block_a, spec, interpret):
-    return _tsmt_impl(x, y, block_m, block_a, spec, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _tsmt_diff(x, y, block_m, block_a, policy):
+    return _tsmt_impl(x, y, block_m, block_a, policy)
 
 
-def _tsmt_fwd(x, y, block_m, block_a, spec, interpret):
-    return _tsmt_impl(x, y, block_m, block_a, spec, interpret), (x, y)
+def _tsmt_fwd(x, y, block_m, block_a, policy):
+    return _tsmt_impl(x, y, block_m, block_a, policy), (x, y)
 
 
-def _tsmt_bwd(block_m, block_a, spec, interpret, res, ct):
+def _tsmt_bwd(block_m, block_a, policy, res, ct):
     x, y = res
     tsmm = _dispatcher()
+    bp = tsmm.backward_policy(policy)
     # Xbar[m,a] = Y[m,b] Chat^T[b,a] and Ybar[m,b] = X[m,a] Chat[a,b]:
     # both are tall-m, tiny-contraction products -- TSM2L-shaped.
-    dx = tsmm.tsmm(y, ct.T, interpret=interpret)
-    dy = tsmm.tsmm(x, ct, interpret=interpret)
+    dx = tsmm.tsmm(y, ct.T, policy=bp)
+    dy = tsmm.tsmm(x, ct, policy=bp)
     return dx.astype(x.dtype), dy.astype(y.dtype)
 
 
@@ -199,11 +224,14 @@ _tsmt_diff.defvjp(_tsmt_fwd, _tsmt_bwd)
 
 
 def tsmt(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int | None = None,
-         block_a: int | None = None, spec: perf_model.TPUSpec = perf_model.V5E,
-         interpret: bool | None = None) -> jnp.ndarray:
+         block_a: int | None = None,
+         spec: perf_model.TPUSpec | None = None,
+         interpret: bool | None = None,
+         policy=None) -> jnp.ndarray:
     """C[a,b] = X[m,a]^T @ Y[m,b], m >> a, b. TSMTTSM-style extension.
     Differentiable."""
-    return _tsmt_diff(x, y, block_m, block_a, spec, interpret)
+    p = _effective_policy(policy, spec, interpret)
+    return _tsmt_diff(x, y, block_m, block_a, p)
 
 
 def _ceil_mult(x: int, q: int) -> int:

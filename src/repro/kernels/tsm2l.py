@@ -46,11 +46,16 @@ def _tsm2l_kernel(a_ref, b_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
 def tsm2l_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int,
-                 interpret: bool = False) -> jnp.ndarray:
+                 interpret: bool | None = None) -> jnp.ndarray:
     """Raw pallas_call; requires m % block_m == 0.
 
-    Use ``repro.kernels.ops.tsm2l`` for the padded/dispatched public entry.
+    ``interpret=None`` auto-detects (Python bodies off-TPU). Use
+    ``repro.kernels.ops.tsm2l`` for the padded/dispatched public entry;
+    the ``shard_map`` executor in ``repro.core.tsmm`` handles multi-chip
+    meshes by invoking that entry per shard.
     """
+    if interpret is None:
+        interpret = compat.auto_interpret()
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)

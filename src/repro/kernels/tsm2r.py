@@ -52,11 +52,17 @@ def _tsm2r_kernel(a_ref, b_ref, o_ref, acc_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
 def tsm2r_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int, block_k: int,
-                 interpret: bool = False) -> jnp.ndarray:
+                 interpret: bool | None = None) -> jnp.ndarray:
     """Raw pallas_call; requires m % block_m == 0 and k % block_k == 0.
 
-    Use ``repro.kernels.ops.tsm2r`` for the padded/dispatched public entry.
+    ``interpret=None`` auto-detects (Python bodies off-TPU). Use
+    ``repro.kernels.ops.tsm2r`` for the padded/dispatched public entry;
+    under a multi-chip mesh the ``shard_map`` executor in
+    ``repro.core.tsmm`` invokes that entry per shard (this call has no
+    GSPMD partitioning rule of its own).
     """
+    if interpret is None:
+        interpret = compat.auto_interpret()
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)

@@ -50,11 +50,16 @@ def _tsmt_kernel(x_ref, y_ref, o_ref, acc_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_a", "interpret"))
 def tsmt_pallas(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int, block_a: int,
-                interpret: bool = False) -> jnp.ndarray:
+                interpret: bool | None = None) -> jnp.ndarray:
     """Raw pallas_call; requires m % block_m == 0 and a % block_a == 0.
 
-    Use ``repro.kernels.ops.tsmt`` for the padded/dispatched public entry.
+    ``interpret=None`` auto-detects (Python bodies off-TPU). Use
+    ``repro.kernels.ops.tsmt`` for the padded/dispatched public entry;
+    under a multi-chip mesh the ``shard_map`` executor in
+    ``repro.core.tsmm`` runs that entry per shard and psums the partials.
     """
+    if interpret is None:
+        interpret = compat.auto_interpret()
     m, a = x.shape
     m2, b = y.shape
     assert m == m2, (x.shape, y.shape)

@@ -13,17 +13,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+import functools
+
 from repro.core import tsmm
-
-
-import os
-
-# Hillclimb lever (EXPERIMENTS.md §Perf): emit parameter gradients in the
-# parameter dtype instead of f32. The default VJP of an f32-accumulating
-# dot produces f32 cotangents, doubling per-device gradient memory under
-# pure-DP/ZeRO-1 (12.8 GiB -> 6.4 GiB for a 3B model). Accumulation inside
-# each dot stays f32 either way.
-_PARAM_DTYPE_GRADS = os.environ.get("REPRO_BF16_PARAM_GRADS", "0") == "1"
 
 
 def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
@@ -37,23 +29,30 @@ def _dense_raw(w, x):
         preferred_element_type=jnp.float32).astype(x.dtype)
 
 
-@jax.custom_vjp
-def _dense_pg(w, x):
-    return _dense_raw(w, x)
+# Param-dtype-gradient variant (GemmPolicy.param_dtype_grads, the old
+# REPRO_BF16_PARAM_GRADS lever): emit parameter gradients in the parameter
+# dtype instead of f32. The default VJP of an f32-accumulating dot produces
+# f32 cotangents, doubling per-device gradient memory under pure-DP/ZeRO-1
+# (12.8 GiB -> 6.4 GiB for a 3B model). Accumulation inside each dot stays
+# f32 either way; the policy rides the nondiff arg so the backward
+# re-dispatch honors the scope dense() was traced under.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _dense_pg(w, x, policy):
+    return tsmm.tsmm(x, w, policy=policy)
 
 
-def _dense_pg_fwd(w, x):
-    return _dense_raw(w, x), (w, x)
+def _dense_pg_fwd(w, x, policy):
+    return tsmm.tsmm(x, w, policy=policy), (w, x)
 
 
-def _dense_pg_bwd(res, dy):
+def _dense_pg_bwd(policy, res, dy):
     w, x = res
-    x2 = x.reshape(-1, x.shape[-1])
-    dy2 = dy.reshape(-1, dy.shape[-1])
-    dw = lax.dot_general(x2, dy2, (((0,), (0,)), ((), ())),
-                         preferred_element_type=jnp.float32).astype(w.dtype)
-    dx = lax.dot_general(dy, w, (((dy.ndim - 1,), (1,)), ((), ())),
-                         preferred_element_type=jnp.float32).astype(x.dtype)
+    bp = tsmm.backward_policy(policy)
+    # dw[d_in,d_out] = X^T dY reduced over every token dim: the TSMTTSM
+    # shape; tsmm_t collapses the leading dims into the reduction itself.
+    dw = tsmm.tsmm_t(x, dy, policy=bp).astype(w.dtype)
+    dx = tsmm.tsmm(dy, w.T, policy=bp).astype(x.dtype)
     return dw, dx
 
 
@@ -65,23 +64,23 @@ def dense(w, x):
 
     Every model projection (QKV/out/MLP/LoRA/SSM in-out) lands here, so
     this is where the tall-and-skinny dispatcher hooks into the train path:
-    activations flatten to (tokens, d_in) and go through ``tsmm``, which
-    routes to a TSM2X kernel when the shape qualifies (e.g. LoRA/PowerSGD
-    ranks, skinny heads at large token counts) and to the identical
-    ``dot_general`` otherwise -- including under a multi-chip SPMD mesh
-    context, where the dispatcher always defers to dense (pallas has no
-    GSPMD partitioning rule). ``REPRO_TSMM=off`` pins the dense path;
-    the flag is read at trace time, so A/B arms need separate jit caches.
-    The custom-VJP ``_dense_pg`` variant keeps precedence when
-    REPRO_BF16_PARAM_GRADS is set (it owns the backward dtype).
+    ``tsmm`` takes the (..., S, d_in) activations as-is (it owns the
+    leading-dim collapse), routes to a TSM2X kernel when the shape
+    qualifies (e.g. LoRA/PowerSGD ranks, skinny heads at large token
+    counts), to the identical reshape-free ``dot_general`` otherwise, and
+    to the per-shard ``shard_map`` executor under a multi-chip mesh. All
+    routing follows the active ``tsmm.policy(...)`` scope, captured at
+    trace time -- ``with tsmm.policy(mode="dense")`` is the A/B escape
+    hatch (A/B arms still need separate jit caches). When the scope sets
+    ``param_dtype_grads``, the custom-VJP ``_dense_pg`` variant owns the
+    backward dtype.
     """
-    if _PARAM_DTYPE_GRADS:
-        return _dense_pg(w, x)
-    if tsmm.enabled():
-        x2 = x.reshape(-1, x.shape[-1])
-        out = tsmm.tsmm(x2, w)
-        return out.reshape(*x.shape[:-1], w.shape[-1])
-    return _dense_raw(w, x)
+    p = tsmm.current_policy()
+    if x.ndim < 2:
+        return _dense_raw(w, x)
+    if p.param_dtype_grads:
+        return _dense_pg(w, x, p)
+    return tsmm.tsmm(x, w)
 
 
 # ---------------------------------------------------------------------------

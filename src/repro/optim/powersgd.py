@@ -14,8 +14,10 @@ property covered by tests/test_optim.py).
 The kernels are engaged through ``repro.core.tsmm`` so shapes that don't
 qualify (small layers, 1-D params) fall back to dense all-reduce. Both
 projections are differentiable (the ops carry custom_vjp rules), so
-compression can sit inside traced/differentiated train steps; set
-``REPRO_TSMM=off`` to A/B the whole protocol against stock XLA dots.
+compression can sit inside traced/differentiated train steps. Routing
+follows the active ``tsmm.policy(...)`` scope (or an explicit ``policy=``
+passed here); ``with tsmm.policy(mode="dense")`` A/Bs the whole protocol
+against stock XLA dots.
 """
 
 from __future__ import annotations
@@ -61,7 +63,8 @@ def _orthonormalize(m):
     return jnp.stack(cols, axis=1)
 
 
-def compress_one(cfg: PowerSGDConfig, grad, st, *, psum=None, interpret=None):
+def compress_one(cfg: PowerSGDConfig, grad, st, *, psum=None, policy=None,
+                 interpret=None):
     """Vogels et al. protocol order (matters across replicas!):
 
         P_local = (G+e) Q_prev ; P = mean_psum(P) ; P = orth(P)
@@ -69,13 +72,15 @@ def compress_one(cfg: PowerSGDConfig, grad, st, *, psum=None, interpret=None):
         approx  = P Q^T        ; e = (G+e) - approx
 
     ``psum`` must be a MEAN over the DP group (or identity locally).
+    ``policy`` pins a GemmPolicy for both projections (defaults to the
+    active scope); ``interpret=`` is the deprecated per-call alias.
     """
     g = grad.astype(jnp.float32) + st["err"] * cfg.ef_decay
-    p = tsmm.tsmm(g, st["q"], interpret=interpret)               # TSM2R
+    p = tsmm.tsmm(g, st["q"], policy=policy, interpret=interpret)   # TSM2R
     if psum:
         p = psum(p)
     p = _orthonormalize(p)
-    q = tsmm.tsmm_t(g, p, interpret=interpret)                   # TSMT
+    q = tsmm.tsmm_t(g, p, policy=policy, interpret=interpret)       # TSMT
     if psum:
         q = psum(q)
     approx = p @ q.T
@@ -84,7 +89,7 @@ def compress_one(cfg: PowerSGDConfig, grad, st, *, psum=None, interpret=None):
 
 
 def compress_tree(cfg: PowerSGDConfig, grads, state, *, psum=None,
-                  interpret=None):
+                  policy=None, interpret=None):
     """End-to-end: compress each eligible grad, (optionally) reduce factors
     across DP with ``psum`` (a MEAN-reduce callable), decompress.
     Non-eligible leaves are reduced dense. Returns (grads, state, metrics)."""
@@ -100,7 +105,8 @@ def compress_tree(cfg: PowerSGDConfig, grads, state, *, psum=None,
             out_g.append(g2)
             out_s.append(None)
             continue
-        approx, st2 = compress_one(cfg, g, st, psum=psum, interpret=interpret)
+        approx, st2 = compress_one(cfg, g, st, psum=psum, policy=policy,
+                                   interpret=interpret)
         bytes_sent += (st2["q"].size + approx.shape[0] * cfg.rank) * 4
         out_g.append(approx.astype(g.dtype))
         out_s.append(st2)

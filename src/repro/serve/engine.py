@@ -13,20 +13,36 @@ host-side (examples/serve_lm.py) -- the device functions are fixed-shape.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import tsmm
 from repro.models import model
 
 
-def make_serve_fns(cfg):
+def make_serve_fns(cfg, policy: "tsmm.GemmPolicy | None" = None):
+    """Build (prefill_step, decode_step) pure functions for jit.
+
+    ``policy`` pins a GemmPolicy scope around the traced bodies (e.g.
+    ``GemmPolicy(mode="dense")`` for an A/B arm, or ``spec=V5P`` on newer
+    hardware). GEMM dispatch is trace-time, so the scope only needs to be
+    live while jit traces these functions -- wrapping the bodies here means
+    callers don't have to manage the scope around their own ``jax.jit``.
+    """
+    def _scope():
+        return (tsmm.policy(policy) if policy is not None
+                else contextlib.nullcontext())
+
     def prefill_step(params, batch, cache):
-        return model.prefill(params, cfg, batch, cache)
+        with _scope():
+            return model.prefill(params, cfg, batch, cache)
 
     def decode_step(params, tokens, pos, cache):
-        return model.decode_step(params, cfg, tokens, pos, cache)
+        with _scope():
+            return model.decode_step(params, cfg, tokens, pos, cache)
 
     return prefill_step, decode_step
 
@@ -38,13 +54,14 @@ def sample_token(key, logits, temperature: float = 0.0):
 
 
 def generate(params, cfg, prompts, max_new: int, *, key=None,
-             temperature: float = 0.0, extras=None):
+             temperature: float = 0.0, extras=None, policy=None):
     """prompts: (B, S) int32. Returns (B, max_new) generated tokens.
 
     Host loop over jitted single-token steps (the production engine would
     run this under an async scheduler; step functions are identical).
+    ``policy`` threads a GemmPolicy into the jitted steps.
     """
-    prefill_step, decode_step = make_serve_fns(cfg)
+    prefill_step, decode_step = make_serve_fns(cfg, policy=policy)
     prefill_j = jax.jit(prefill_step)
     decode_j = jax.jit(decode_step)
 

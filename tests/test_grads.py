@@ -126,16 +126,26 @@ def test_finite_difference_directional():
 
 
 def test_repro_tsmm_off_forces_dense(monkeypatch):
+    """The deprecated env var still works as a process-default alias: it is
+    read into the default GemmPolicy (on refresh), not per-trace."""
     monkeypatch.setenv("REPRO_TSMM", "off")
-    assert not tsmm.enabled()
-    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
-    a, b = _rand(k1, (4096, 16)), _rand(k2, (16, 8))
-    # Dense path: still correct, still differentiable.
-    np.testing.assert_allclose(np.asarray(tsmm.tsmm(a, b)),
-                               np.asarray(ref.tsm2r_ref(a, b)), **TOL)
-    da, db = _grads(tsmm.tsmm, a, b, jnp.ones((4096, 8)))
-    ra, rb = _grads(ref.tsm2r_ref, a, b, jnp.ones((4096, 8)))
-    np.testing.assert_allclose(np.asarray(da), np.asarray(ra), **TOL)
-    np.testing.assert_allclose(np.asarray(db), np.asarray(rb), **TOL)
-    monkeypatch.delenv("REPRO_TSMM")
+    try:
+        with pytest.deprecated_call():
+            tsmm.refresh_default_policy()
+        assert tsmm.default_policy().mode == "dense"
+        assert not tsmm.enabled()
+        k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+        a, b = _rand(k1, (4096, 16)), _rand(k2, (16, 8))
+        # Dense path: still correct, still differentiable.
+        with tsmm.record_dispatches() as log:
+            np.testing.assert_allclose(np.asarray(tsmm.tsmm(a, b)),
+                                       np.asarray(ref.tsm2r_ref(a, b)), **TOL)
+        assert [e.executor for e in log] == ["dense-xla"]
+        da, db = _grads(tsmm.tsmm, a, b, jnp.ones((4096, 8)))
+        ra, rb = _grads(ref.tsm2r_ref, a, b, jnp.ones((4096, 8)))
+        np.testing.assert_allclose(np.asarray(da), np.asarray(ra), **TOL)
+        np.testing.assert_allclose(np.asarray(db), np.asarray(rb), **TOL)
+    finally:
+        monkeypatch.delenv("REPRO_TSMM")
+        tsmm.refresh_default_policy()
     assert tsmm.enabled()
