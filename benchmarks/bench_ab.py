@@ -1,0 +1,54 @@
+"""A/B policy arms with per-arm jit-cache isolation.
+
+Regression section for the A/B timing-leakage bug: dispatch policy is a
+trace-time constant, so arms that shared one jitted callable across
+``tsmm.policy`` scopes silently re-timed the first arm's baked-in policy.
+Every arm here goes through ``benchmarks.common.timeit_arm`` (fresh jit
+wrapper per arm) and ``record_dispatches`` asserts the arm actually hit
+its intended executor -- a wrong route aborts the section instead of
+publishing a bogus ratio.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, rand, timeit_arm
+from repro.core import tsmm
+
+# One shape per kernel kind, all inside the auto-dispatch regime.
+SHAPES = [
+    ("tsm2r", (4096, 1024, 8)),
+    ("tsm2l", (8192, 16, 16)),
+    ("tsmt", (4096, 64, 8)),
+]
+
+
+def run():
+    rows = []
+    for kind, (m, d1, d2) in SHAPES:
+        if kind == "tsmt":
+            x, y = rand(m + d1, (m, d1)), rand(m + d2, (m, d2))
+            fn, args = (lambda x_, y_: tsmm.tsmm_t(x_, y_)), (x, y)
+        else:
+            a, b = rand(m + d1, (m, d1)), rand(m + d2, (d1, d2))
+            fn, args = (lambda a_, b_: tsmm.tsmm(a_, b_)), (a, b)
+        arms = [
+            ("dense", tsmm.GemmPolicy(mode="dense"), {"dense-xla"}),
+            ("auto", tsmm.GemmPolicy(), {"pallas-tpu"}),
+            ("interpret", tsmm.GemmPolicy(interpret=True), {"interpret"}),
+        ]
+        times = {}
+        for arm, pol, expect in arms:
+            us, log = timeit_arm(fn, *args, policy=pol,
+                                 expect_executors=expect, reps=3, warmup=1)
+            times[arm] = us
+            kinds = sorted({e.kind for e in log})
+            rows.append((f"ab_{kind}_m{m}_{arm}", round(us, 1),
+                         f"executors={'+'.join(sorted({e.executor for e in log}))};"
+                         f"kinds={'+'.join(kinds)};dispatch_ok=1"))
+        rows.append((f"ab_{kind}_m{m}_ratio", 0,
+                     f"dense_over_auto={times['dense'] / times['auto']:.3f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

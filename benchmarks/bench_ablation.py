@@ -9,9 +9,8 @@ kernel."""
 from __future__ import annotations
 
 import jax.numpy as jnp
-from jax import jit
 
-from benchmarks.common import emit, rand, timeit
+from benchmarks.common import emit, rand, timeit_arm
 from repro.core import perf_model
 from repro.kernels import ref
 
@@ -21,9 +20,9 @@ def run():
     n = 8
     a, b = rand(1, (m, k)), rand(2, (k, n))
     rows = []
-    t0 = timeit(jit(ref.tsm2r_v0_inner), a, b)
-    t1 = timeit(jit(ref.tsm2r_v1_outer), a, b)
-    t_dot = timeit(jit(ref.tsm2r_ref), a, b)
+    t0, _ = timeit_arm(ref.tsm2r_v0_inner, a, b)
+    t1, _ = timeit_arm(ref.tsm2r_v1_outer, a, b)
+    t_dot, _ = timeit_arm(ref.tsm2r_ref, a, b)
     rows.append(("ablation_v0_inner_cpu", round(t0, 1), f"speedup_vs_v0=1.00"))
     rows.append(("ablation_v1_outer_cpu", round(t1, 1),
                  f"speedup_vs_v0={t0 / t1:.2f}"))

@@ -1,13 +1,21 @@
 """End-to-end micro-benchmarks: train-step and decode-step throughput on
-the reduced configs (CPU wall clock -- relative regressions tracking)."""
+the reduced configs (CPU wall clock -- relative regressions tracking).
+
+Each policy arm (tsmm dispatch vs forced-dense) is timed through
+``timeit_arm``: a fresh jit wrapper traced inside its own policy scope,
+with the dispatch spy asserting the dense arm really stayed on dense-xla.
+Sharing one jitted step across arms would re-time the first arm's policy
+(trace-time capture) -- the A/B leakage this harness exists to prevent.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit_arm
 from repro.configs import registry
+from repro.core import tsmm
 from repro.data import pipeline
 from repro.models import model
 from repro.optim import adamw
@@ -22,19 +30,30 @@ def run():
                                    vocab_size=cfg.vocab_size)
         opt = adamw.AdamWConfig(lr=1e-3)
         state = ts.init_train_state(jax.random.PRNGKey(0), cfg, opt)
-        step = jax.jit(ts.make_train_step(cfg, opt))
+        step_fn = ts.make_train_step(cfg, opt)
         batch = jax.tree.map(jnp.asarray, pipeline.batch_for_step(dcfg, 0))
-        us = timeit(lambda s, b: step(s, b)[0], state, batch, reps=3, warmup=1)
         toks = 4 * 64
-        rows.append((f"train_step_{arch}_smoke", round(us, 0),
-                     f"tokens_per_s={toks / (us / 1e6):.0f}"))
+        arms = [("tsmm", None, None),
+                ("dense", tsmm.GemmPolicy(mode="dense"), {"dense-xla"})]
+        times = {}
+        for arm, pol, expect in arms:
+            us, log = timeit_arm(lambda s, b: step_fn(s, b)[0], state, batch,
+                                 policy=pol, expect_executors=expect,
+                                 reps=3, warmup=0)
+            times[arm] = us
+            execs = "+".join(sorted({e.executor for e in log})) or "none"
+            rows.append((f"train_step_{arch}_smoke_{arm}", round(us, 0),
+                         f"tokens_per_s={toks / (us / 1e6):.0f};"
+                         f"executors={execs}"))
+        rows.append((f"train_step_{arch}_smoke_ab", 0,
+                     f"dense_over_tsmm={times['dense'] / times['tsmm']:.3f}"))
 
         params = model.init(jax.random.PRNGKey(0), cfg)
         cache = model.init_cache(cfg, 2, 64)
-        dec = jax.jit(lambda p, t, pos, c: model.decode_step(p, cfg, t, pos, c))
         tok = jnp.zeros((2, 1), jnp.int32)
-        us = timeit(lambda p, t, c: dec(p, t, 5, c), params, tok, cache,
-                    reps=3, warmup=1)
+        us, _ = timeit_arm(
+            lambda p, t, c: model.decode_step(p, cfg, t, 5, c),
+            params, tok, cache, reps=3, warmup=0)
         rows.append((f"decode_step_{arch}_smoke", round(us, 0),
                      f"tokens_per_s={2 / (us / 1e6):.0f}"))
     return emit(rows)

@@ -8,9 +8,8 @@ case at m=1e7)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
-from jax import jit
 
-from benchmarks.common import emit, rand, timeit
+from benchmarks.common import emit, rand, timeit_arm
 from repro.core import perf_model
 from repro.kernels import ref
 
@@ -42,7 +41,7 @@ def run():
     # CPU-timed reference path at a scaled shape
     for m in (100_000, 1_000_000):
         a, bb = rand(m, (m, 16)), rand(m + 1, (16, 16))
-        t_dot = timeit(jit(ref.tsm2l_ref), a, bb)
+        t_dot, _ = timeit_arm(ref.tsm2l_ref, a, bb)
         rows.append((f"tsm2l_cpu_m{m}_dot", round(t_dot, 1), ""))
     return emit(rows)
 

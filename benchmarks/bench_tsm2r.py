@@ -11,9 +11,8 @@ MXU pass -- see derivation in EXPERIMENTS.md)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
-from jax import jit
 
-from benchmarks.common import emit, rand, timeit
+from benchmarks.common import emit, rand, timeit_arm
 from repro.core import perf_model
 from repro.kernels import ref
 
@@ -39,9 +38,9 @@ def run():
         for n in NS:
             a = rand(m + n, (m, k))
             b = rand(m - n, (k, n))
-            t_dot = timeit(jit(ref.tsm2r_ref), a, b)
-            t_v1 = timeit(jit(ref.tsm2r_v1_outer), a, b)
-            t_v0 = (timeit(jit(ref.tsm2r_v0_inner), a, b)
+            t_dot, _ = timeit_arm(ref.tsm2r_ref, a, b)
+            t_v1, _ = timeit_arm(ref.tsm2r_v1_outer, a, b)
+            t_v0 = (timeit_arm(ref.tsm2r_v0_inner, a, b)[0]
                     if n <= 8 else float("nan"))
             rows.append((f"tsm2r_cpu_m{m}_n{n}_dot", round(t_dot, 1),
                          f"v0={t_v0:.0f}us;v1={t_v1:.0f}us"))

@@ -7,27 +7,69 @@ Measurement policy on this CPU container (documented in EXPERIMENTS.md):
   is meaningless; the kernel numbers reported are the *modeled v5e* terms
   from core/perf_model.py (the paper's own Fig.7/11 metric -- bandwidth
   fraction), plus numerics validation against the oracle.
+
+A/B arms and policy scopes: the dispatch policy is captured at *trace*
+time, so two arms that share one jitted callable silently reuse the first
+arm's baked-in policy -- the timing-leakage bug. ``timeit_arm`` gives each
+arm a fresh ``jax.jit`` wrapper traced inside its own policy scope (via
+``core.autotune.jit_isolated``, the same harness the autotuner uses) and
+asserts through ``record_dispatches`` that the arm actually hit its
+intended executor.
 """
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
+from repro.core import tsmm
+from repro.core.autotune import jit_isolated, time_call  # noqa: F401
+
 
 def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
-    """Median wall time (us) of jitted fn."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts) // 2] * 1e6
+    """Median wall time (us) of jitted fn (one timing loop repo-wide:
+    ``core.autotune.time_call``)."""
+    return time_call(fn, *args, reps=reps, warmup=warmup) * 1e6
+
+
+def timeit_arm(fn, *args, policy=None, expect_executors=None, reps: int = 5,
+               warmup: int = 1):
+    """Time one A/B arm with jit-cache isolation + dispatch sanity.
+
+    ``fn`` is wrapped in a *fresh* ``jax.jit`` and traced under ``policy``
+    (a GemmPolicy, or None for the current scope), so the arm owns its
+    cache entry. ``expect_executors``: exact set of executor names the
+    trace must have dispatched to (raises AssertionError otherwise); None
+    skips the check. Returns ``(us_per_call, dispatch_log)``.
+    """
+    f, log = jit_isolated(fn, *args, policy=policy)
+    if expect_executors is not None:
+        seen = {e.executor for e in log}
+        if seen != set(expect_executors):
+            raise AssertionError(
+                f"arm hit executors {sorted(seen)}, expected "
+                f"{sorted(expect_executors)}; dispatch log: {log}")
+    return timeit(f, *args, reps=reps, warmup=warmup), log
+
+
+def dispatch_sanity(m: int = 4096, k: int = 512, n: int = 8):
+    """One row per canonical policy arm: did a fresh jit under that policy
+    hit the executor the policy intends? Emitted into the --json report so
+    CI can fail on silent dispatch regressions."""
+    a, b = rand(0, (m, k)), rand(1, (k, n))
+    arms = [
+        ("dense", tsmm.GemmPolicy(mode="dense"), "dense-xla"),
+        ("auto", tsmm.GemmPolicy(), "pallas-tpu"),
+        ("interpret", tsmm.GemmPolicy(interpret=True), "interpret"),
+    ]
+    out = []
+    for name, pol, expect in arms:
+        _, log = jit_isolated(lambda a_, b_: tsmm.tsmm(a_, b_), a, b,
+                              policy=pol)
+        observed = sorted({e.executor for e in log})
+        out.append({"arm": name, "shape": [m, k, n], "expected": expect,
+                    "observed": observed, "ok": observed == [expect]})
+    return out
 
 
 def rand(key, shape, dtype=jnp.float32):

@@ -2,12 +2,24 @@
 
     PYTHONPATH=src python -m benchmarks.run [--json BENCH_out.json]
                                             [--sections SUBSTR]
+                                            [--autotune]
+                                            [--autotune-shapes SPEC]
 
 Prints ``name,us_per_call,derived`` CSV per section. ``--json`` also writes
 a machine-readable report (per-section rows, bound classes for the
-canonical paper shapes, and the active GemmPolicy) so the perf trajectory
-can be tracked across PRs -- CI convention: ``BENCH_<rev>.json``.
+canonical paper shapes, the active GemmPolicy, and a dispatch-sanity block
+asserting each policy arm hit its intended executor) so the perf
+trajectory can be tracked across PRs -- CI convention: ``BENCH_<rev>.json``.
 ``--sections`` runs only sections whose title contains the substring.
+
+``--autotune`` additionally runs the measured-wall-clock autotuner
+(``core.autotune``) over a small shape set, emitting the TuningTable, the
+per-shape model-vs-measured error, and the calibrated model constants into
+the report. Off-TPU the kernels run in interpret mode, so the absolute
+times exercise the mechanism only; authoritative tables come from a real
+TPU run (README "Autotuning"). ``--autotune-shapes`` overrides the shape
+list: semicolon-separated ``kind:m,k,n`` entries, e.g.
+``tsm2r:4096,1024,8;tsm2l:8192,16,16``.
 
 The roofline tables (arch x shape cells) are produced separately by
 launch/dryrun.py + roofline_report.py since they need the 512-device
@@ -32,6 +44,14 @@ CANONICAL_SHAPES = [
     (4096, 4096, 1024),
 ]
 
+# Default --autotune shape set: one shape per kernel kind, small enough to
+# measure in interpret mode on CI's CPU runners.
+AUTOTUNE_SHAPES = [
+    ("tsm2r", 2048, 512, 8),
+    ("tsm2l", 8192, 16, 16),
+    ("tsmt", 4096, 64, 8),
+]
+
 
 def _num(x):
     try:
@@ -40,14 +60,79 @@ def _num(x):
         return None
 
 
-def build_report(section_results):
+def parse_autotune_shapes(text):
+    """``"tsm2r:4096,1024,8;tsm2l:8192,16,16"`` -> [(kind, m, d1, d2), ...]."""
+    shapes = []
+    for part in text.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        kind, _, dims = part.partition(":")
+        try:
+            m, d1, d2 = (int(v) for v in dims.split(","))
+        except ValueError:
+            raise SystemExit(
+                f"--autotune-shapes entry {part!r} is not kind:m,k,n") from None
+        shapes.append((kind.strip(), m, d1, d2))
+    return shapes
+
+
+def run_autotune(shapes, reps: int = 3, warmup: int = 1):
+    """Autotune + calibrate; return the report payload (also printed)."""
+    import jax.numpy as jnp
+
+    from repro.core import autotune, tsmm
+
+    pol = tsmm.current_policy()
+    result = autotune.calibrate(shapes, dtype=jnp.float32, policy=pol,
+                                reps=reps, warmup=warmup)
+    table = result.table
+    model_error = []
+    print("name,us_per_call,derived")
+    for r in table.records:
+        m, d1, d2 = r.shape
+        model_error.append({
+            "kind": r.kind, "m": m, "d1": d1, "d2": d2,
+            "executor": r.executor,
+            "best_params": dict(r.params),
+            "measured_us": r.measured_us,
+            "model_us": r.model_us,
+            "model_error": r.model_error,
+            "model_pick": dict(r.model_pick),
+            "model_pick_measured_us": r.model_pick_measured_us,
+            "pick_matches": r.pick_matches,
+        })
+        print(f"autotune_{r.kind}_m{m},{r.measured_us:.1f},"
+              f"best={dict(r.params)};model_pick={dict(r.model_pick)};"
+              f"model_err={r.model_error:.3f}")
+    print(f"autotune_calibration,0,err_before={result.error_before:.3f};"
+          f"err_after={result.error_after:.3f}")
+    return {
+        "shapes": [list(s) for s in shapes],
+        "table": table.to_json(),
+        "model_error": model_error,
+        "calibration": {
+            "error_before": result.error_before,
+            "error_after": result.error_after,
+            "fitted": {
+                "step_overhead": result.spec.step_overhead,
+                "dma_latency": result.spec.dma_latency,
+                "vmem_usable": result.spec.vmem_usable,
+            },
+        },
+    }
+
+
+def build_report(section_results, autotune=None, dispatch_sanity=None):
     """Assemble the machine-readable report from
-    ``{title: ("ok"|"error", rows)}``. Pure function (tested)."""
+    ``{title: ("ok"|"error", rows)}``. Pure function (tested); the
+    ``autotune`` / ``dispatch_sanity`` payloads are computed by main."""
     import jax
 
     from repro.core import perf_model, tsmm
 
     pol = tsmm.current_policy()
+    tbl = pol.tuning_table
     report = {
         "schema": "repro-tsm2x-bench/1",
         "backend": jax.default_backend(),
@@ -56,9 +141,12 @@ def build_report(section_results):
             "spec": pol.spec.name,
             "interpret": pol.interpret,
             "shard_map": pol.shard_map,
+            "tuning_table_records": len(tbl.records) if tbl is not None else 0,
         },
         "sections": {},
         "classification": [],
+        "autotune": autotune,
+        "dispatch_sanity": dispatch_sanity,
     }
     for title, (status, rows) in section_results.items():
         report["sections"][title] = {
@@ -87,9 +175,14 @@ def main(argv=None) -> None:
                     help="also write a machine-readable BENCH_*.json report")
     ap.add_argument("--sections", metavar="SUBSTR",
                     help="only run sections whose title contains SUBSTR")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the measured-time autotuner + model calibration "
+                         "and emit the TuningTable into the report")
+    ap.add_argument("--autotune-shapes", metavar="SPEC",
+                    help="override autotune shapes: kind:m,k,n;kind:m,k,n")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_ablation, bench_e2e, bench_params,
+    from benchmarks import (bench_ab, bench_ablation, bench_e2e, bench_params,
                             bench_rect, bench_tsm2l, bench_tsm2r)
     sections = [
         ("Fig6/7+10/11: TSM2R speedup + utilization", bench_tsm2r.run),
@@ -97,6 +190,7 @@ def main(argv=None) -> None:
         ("Fig12: non-square input", bench_rect.run),
         ("Table3/4: kernel parameters + bound classes", bench_params.run),
         ("Fig6 ladder: V0->V3 ablation", bench_ablation.run),
+        ("A/B: policy arms, jit-cache isolated", bench_ab.run),
         ("e2e: train/decode step throughput", bench_e2e.run),
     ]
     if args.sections:
@@ -113,8 +207,21 @@ def main(argv=None) -> None:
             results[title] = ("error", [])
             traceback.print_exc()
 
+    autotune_payload = None
+    if args.autotune:
+        print("\n# === autotune: measured-time parameter search ===")
+        shapes = (parse_autotune_shapes(args.autotune_shapes)
+                  if args.autotune_shapes else AUTOTUNE_SHAPES)
+        try:
+            autotune_payload = run_autotune(shapes)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+
     if args.json_out:
-        report = build_report(results)
+        from benchmarks import common
+        report = build_report(results, autotune=autotune_payload,
+                              dispatch_sanity=common.dispatch_sanity())
         with open(args.json_out, "w") as f:
             json.dump(report, f, indent=2)
         print(f"\nwrote {args.json_out}")

@@ -173,6 +173,23 @@ def tsm2r_model_time(m: int, k: int, n: int, bm: int, bk: int,
     return max(t_mem, t_comp) + t_lat
 
 
+def tsm2l_vmem_usage(bm: int, k: int, n: int, dtype) -> int:
+    """VMEM bytes for one TSM2L grid cell: double-buffered A window, the
+    whole (k, n) B operand resident, f32 accumulator + output window."""
+    b = bytes_per_elem(dtype)
+    return (2 * bm * _roundup(k, 128) * b
+            + _roundup(k, 8) * _roundup(n, 128) * b
+            + bm * _roundup(n, 128) * (4 + b))
+
+
+def tsmt_vmem_usage(bm: int, ba: int, bdim: int, dtype) -> int:
+    """VMEM bytes for one TSMT grid cell: double-buffered X and Y windows
+    plus the unblocked (ba, bdim) f32 accumulator."""
+    b = bytes_per_elem(dtype)
+    return (2 * bm * ba * b + 2 * bm * _roundup(bdim, 128) * b
+            + ba * _roundup(bdim, 128) * 4)
+
+
 def tsm2l_model_time(m: int, k: int, n: int, bm: int,
                      spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> float:
     """TSM2L: whole B in VMEM, one pass over A, grid over m only.
@@ -212,6 +229,58 @@ def tsmt_model_time(m: int, a: int, bdim: int, bm: int, ba: int,
 
 _BM_CANDIDATES = (256, 512, 1024, 2048, 4096)
 _BK_CANDIDATES = (128, 256, 512, 1024, 2048)
+_BM_L_CANDIDATES = (256, 512, 1024, 2048, 4096, 8192, 16384)
+_BA_CANDIDATES = (128, 256, 512, 1024)
+
+_TIE_EPS = 1e-12
+
+
+def _pick_best(scored, tie_key):
+    """Argmin of modeled time; ties (within _TIE_EPS) break by ``tie_key``.
+
+    The documented rule, applied uniformly to all three choosers: ties
+    break toward *deeper* pipelines along the streamed/reduction axis
+    (smaller reduction-axis block => more grid steps => better DMA overlap),
+    and residual ties toward fewer re-fetches of the stationary operand
+    (larger parallel-axis block).
+    """
+    best_t = min(t for t, _ in scored)
+    tied = [p for t, p in scored if t <= best_t + _TIE_EPS]
+    return min(tied, key=tie_key)
+
+
+def tsm2r_candidates(m: int, k: int, n: int, spec: TPUSpec = V5E,
+                     dtype=jnp.bfloat16) -> list[tuple[int, int]]:
+    """All VMEM-feasible (block_m, block_k) candidates for TSM2R.
+
+    This is the grid both the analytic argmin (``choose_params_tsm2r``) and
+    the measured-time autotuner (``core.autotune``) search over, so the two
+    halves of Algorithm 5 score exactly the same parameter space.
+    """
+    budget = spec.vmem_bytes * spec.vmem_usable
+    return [(bm, bk)
+            for bm in _BM_CANDIDATES if bm <= _roundup(m, spec.sublane)
+            for bk in _BK_CANDIDATES if bk <= _roundup(k, spec.lane)
+            and tsm2r_vmem_usage(bm, bk, n, dtype) <= budget]
+
+
+def tsm2l_candidates(m: int, k: int, n: int, spec: TPUSpec = V5E,
+                     dtype=jnp.bfloat16) -> list[int]:
+    """All VMEM-feasible block_m candidates for TSM2L."""
+    budget = spec.vmem_bytes * spec.vmem_usable
+    return [bm for bm in _BM_L_CANDIDATES
+            if bm <= _roundup(m, spec.sublane)
+            and tsm2l_vmem_usage(bm, k, n, dtype) <= budget]
+
+
+def tsmt_candidates(m: int, a: int, bdim: int, spec: TPUSpec = V5E,
+                    dtype=jnp.bfloat16) -> list[tuple[int, int]]:
+    """All VMEM-feasible (block_m, block_a) candidates for TSMT."""
+    budget = spec.vmem_bytes * spec.vmem_usable
+    return [(bm, ba)
+            for bm in _BM_CANDIDATES if bm <= _roundup(m, spec.sublane)
+            for ba in _BA_CANDIDATES if ba <= _roundup(a, spec.lane)
+            and tsmt_vmem_usage(bm, ba, bdim, dtype) <= budget]
 
 
 def choose_params_tsm2r(m: int, k: int, n: int, spec: TPUSpec = V5E,
@@ -221,67 +290,47 @@ def choose_params_tsm2r(m: int, k: int, n: int, spec: TPUSpec = V5E,
     Same contract as the paper's Algorithm 5 (choose t2/t3 per bound class,
     then offline-profile t1): we enumerate the hardware-quantized candidate
     grid and take the argmin of the modeled time; ties break toward deeper
-    k-pipelines (better DMA overlap).
+    k-pipelines (smaller block_k -- better DMA overlap), residual ties
+    toward larger block_m (fewer B-window re-fetches).
     """
-    budget = spec.vmem_bytes * spec.vmem_usable
-    best, best_t = None, float("inf")
-    for bm in _BM_CANDIDATES:
-        if bm > _roundup(m, spec.sublane):
-            continue
-        for bk in _BK_CANDIDATES:
-            if bk > _roundup(k, spec.lane):
-                continue
-            if tsm2r_vmem_usage(bm, bk, n, dtype) > budget:
-                continue
-            t = tsm2r_model_time(m, k, n, bm, bk, spec, dtype)
-            if t < best_t - 1e-12 or (abs(t - best_t) < 1e-12 and best and bk > best[1]):
-                best, best_t = (bm, bk), t
-    if best is None:  # tiny problem: single block
-        best = (min(_roundup(m, spec.sublane), 256), min(_roundup(k, spec.lane), 128))
-    return best
+    cands = tsm2r_candidates(m, k, n, spec, dtype)
+    if not cands:  # tiny problem: single block
+        return (min(_roundup(m, spec.sublane), 256),
+                min(_roundup(k, spec.lane), 128))
+    scored = [(tsm2r_model_time(m, k, n, bm, bk, spec, dtype), (bm, bk))
+              for bm, bk in cands]
+    return _pick_best(scored, lambda p: (p[1], -p[0]))
 
 
 def choose_params_tsm2l(m: int, k: int, n: int, spec: TPUSpec = V5E,
                         dtype=jnp.bfloat16) -> int:
-    """Pick block_m (the tcf analogue) for TSM2L."""
-    budget = spec.vmem_bytes * spec.vmem_usable
-    b = bytes_per_elem(dtype)
-    best, best_t = 256, float("inf")
-    for bm in (256, 512, 1024, 2048, 4096, 8192, 16384):
-        if bm > _roundup(m, spec.sublane):
-            continue
-        use = 2 * bm * _roundup(k, 128) * b + _roundup(k, 8) * _roundup(n, 128) * b \
-            + bm * _roundup(n, 128) * (4 + b)
-        if use > budget:
-            continue
-        t = tsm2l_model_time(m, k, n, bm, spec, dtype)
-        if t < best_t:
-            best, best_t = bm, t
-    return best
+    """Pick block_m (the tcf analogue) for TSM2L.
+
+    Ties break toward deeper m-pipelines (smaller block_m), per the same
+    rule as ``choose_params_tsm2r``.
+    """
+    cands = tsm2l_candidates(m, k, n, spec, dtype)
+    if not cands:
+        return 256
+    scored = [(tsm2l_model_time(m, k, n, bm, spec, dtype), bm) for bm in cands]
+    return _pick_best(scored, lambda bm: bm)
 
 
 def choose_params_tsmt(m: int, a: int, bdim: int, spec: TPUSpec = V5E,
                        dtype=jnp.bfloat16) -> tuple[int, int]:
-    """Pick (block_m, block_a) for the transposed kernel."""
-    budget = spec.vmem_bytes * spec.vmem_usable
-    b = bytes_per_elem(dtype)
-    best, best_t = None, float("inf")
-    for bm in _BM_CANDIDATES:
-        if bm > _roundup(m, spec.sublane):
-            continue
-        for ba in (128, 256, 512, 1024):
-            if ba > _roundup(a, spec.lane):
-                continue
-            use = 2 * bm * ba * b + 2 * bm * _roundup(bdim, 128) * b \
-                + ba * _roundup(bdim, 128) * 4
-            if use > budget:
-                continue
-            t = tsmt_model_time(m, a, bdim, bm, ba, spec, dtype)
-            if t < best_t:
-                best, best_t = (bm, ba), t
-    if best is None:
-        best = (min(_roundup(m, spec.sublane), 256), min(_roundup(a, spec.lane), 128))
-    return best
+    """Pick (block_m, block_a) for the transposed kernel.
+
+    Ties break toward deeper reduction pipelines (smaller block_m -- m is
+    the streamed reduction here), residual ties toward larger block_a
+    (fewer Y-window re-fetches) -- the same rule as the other choosers.
+    """
+    cands = tsmt_candidates(m, a, bdim, spec, dtype)
+    if not cands:
+        return (min(_roundup(m, spec.sublane), 256),
+                min(_roundup(a, spec.lane), 128))
+    scored = [(tsmt_model_time(m, a, bdim, bm, ba, spec, dtype), (bm, ba))
+              for bm, ba in cands]
+    return _pick_best(scored, lambda p: (p[0], -p[1]))
 
 
 # ---------------------------------------------------------------------------

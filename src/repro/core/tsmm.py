@@ -159,6 +159,14 @@ class GemmPolicy:
     ``dp_axes``: mesh axis names carrying the batch; None = the repo
     convention (``DP_AXIS_NAMES``, shared with ``distributed.sharding``).
     ``executor``: pin a registered backend by name, bypassing selection.
+
+    ``tuning_table``: a ``core.autotune.TuningTable`` of measured-best
+    block params (None = pure analytic choice). When set, ``kernels/ops``
+    consults the measured winner for the shape's bucket before falling
+    back to ``perf_model.choose_params_*``; explicit per-call block kwargs
+    still win over both. Must stay hashable (policies flow through
+    ``custom_vjp`` nondiff args), which TuningTable is; typed loosely here
+    to keep the dispatcher import-cycle-free.
     """
 
     mode: str = "auto"
@@ -173,6 +181,7 @@ class GemmPolicy:
     shard_map: str = "auto"
     dp_axes: tuple[str, ...] | None = None
     executor: str | None = None
+    tuning_table: object | None = None
 
     def __post_init__(self):
         if self.mode not in _ALL_MODES:

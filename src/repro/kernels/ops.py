@@ -1,6 +1,8 @@
 """Public jit'd entry points for the TSM2X kernels.
 
-Handles: block-size selection (perf model, driven by ``GemmPolicy.spec``),
+Handles: block-size selection (measured winners from
+``GemmPolicy.tuning_table`` when present, else the analytic perf model
+driven by ``GemmPolicy.spec``; explicit per-call block kwargs beat both),
 padding to block multiples (zero-padding is exact for GEMM), interpret-mode
 resolution (policy field; auto-detect runs kernel bodies in Python on CPU
 and compiles via Mosaic on TPU), and lane-dim padding of skinny minor dims
@@ -74,6 +76,22 @@ def _resolve_interpret(policy) -> bool:
             else policy.interpret)
 
 
+def _tuned_params(policy, kind, dims, dtype, interpret) -> dict | None:
+    """Measured-best block params from ``policy.tuning_table``, if any.
+
+    The table is keyed by (kind, shape bucket, dtype, spec name, executor);
+    the executor key matches how this call will actually run, so a table
+    tuned in interpret mode never silences the analytic model on hardware.
+    """
+    table = policy.tuning_table
+    if table is None:
+        return None
+    executor = "interpret" if interpret else "pallas-tpu"
+    rec = table.lookup(kind, *dims, dtype=dtype, spec=policy.spec.name,
+                       executor=executor)
+    return None if rec is None else rec.params_dict
+
+
 # ---------------------------------------------------------------------------
 # TSM2R
 # ---------------------------------------------------------------------------
@@ -83,11 +101,19 @@ def _tsm2r_impl(a, b, block_m, block_k, policy):
     n = b.shape[1]
     interpret = _resolve_interpret(policy)
     if block_m is None or block_k is None:
-        bm, bk = perf_model.choose_params_tsm2r(m, k, n, policy.spec, a.dtype)
+        tuned = _tuned_params(policy, "tsm2r", (m, k, n), a.dtype, interpret)
+        if tuned is None:
+            bm, bk = perf_model.choose_params_tsm2r(m, k, n, policy.spec,
+                                                    a.dtype)
+        else:
+            bm, bk = tuned["block_m"], tuned["block_k"]
         block_m = block_m or bm
         block_k = block_k or bk
-    block_m = min(block_m, _ceil_mult(m, 8))
-    block_k = min(block_k, _ceil_mult(k, 8))
+    block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
+    # block_k is a lane dim of the A window: clamp with the same lane
+    # quantization the perf model's candidate filter uses, so the block the
+    # kernel runs is the block the VMEM budget was checked against.
+    block_k = min(block_k, _ceil_mult(k, policy.spec.lane))
     a_p = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
     b_p = _pad_to(b, 0, block_k)
     out = tsm2r_pallas(a_p, b_p, block_m=block_m, block_k=block_k,
@@ -139,8 +165,11 @@ def _tsm2l_impl(a, b, block_m, policy):
     n = b.shape[1]
     interpret = _resolve_interpret(policy)
     if block_m is None:
-        block_m = perf_model.choose_params_tsm2l(m, k, n, policy.spec, a.dtype)
-    block_m = min(block_m, _ceil_mult(m, 8))
+        tuned = _tuned_params(policy, "tsm2l", (m, k, n), a.dtype, interpret)
+        block_m = (tuned["block_m"] if tuned is not None else
+                   perf_model.choose_params_tsm2l(m, k, n, policy.spec,
+                                                  a.dtype))
+    block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
     a_p = _pad_to(a, 0, block_m)
     out = tsm2l_pallas(a_p, b, block_m=block_m, interpret=interpret)
     return out[:m]
@@ -187,12 +216,19 @@ def _tsmt_impl(x, y, block_m, block_a, policy):
     b_dim = y.shape[1]
     interpret = _resolve_interpret(policy)
     if block_m is None or block_a is None:
-        bm, ba = perf_model.choose_params_tsmt(m, a_dim, b_dim, policy.spec,
-                                               x.dtype)
+        tuned = _tuned_params(policy, "tsmt", (m, a_dim, b_dim), x.dtype,
+                              interpret)
+        if tuned is None:
+            bm, ba = perf_model.choose_params_tsmt(m, a_dim, b_dim,
+                                                   policy.spec, x.dtype)
+        else:
+            bm, ba = tuned["block_m"], tuned["block_a"]
         block_m = block_m or bm
         block_a = block_a or ba
-    block_m = min(block_m, _ceil_mult(m, 8))
-    block_a = min(block_a, _ceil_mult(a_dim, 8))
+    block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
+    # block_a is a lane dim of the X window: lane-quantized clamp, matching
+    # the perf model's candidate filter (see _tsm2r_impl).
+    block_a = min(block_a, _ceil_mult(a_dim, policy.spec.lane))
     x_p = _pad_to(_pad_to(x, 0, block_m), 1, block_a)
     y_p = _pad_to(y, 0, block_m)
     out = tsmt_pallas(x_p, y_p, block_m=block_m, block_a=block_a,

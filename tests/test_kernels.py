@@ -62,6 +62,51 @@ def test_tsm2r_block_sweep(bm, bk):
     np.testing.assert_allclose(got, ref.tsm2r_ref(a, b), rtol=1e-4, atol=1e-5)
 
 
+def test_tsm2r_block_quantization_matches_model(monkeypatch):
+    """Regression (k % 128 != 0): the runtime block_k clamp must use the
+    same lane quantization as the perf model's candidate filter. The old
+    ``_ceil_mult(k, 8)`` clamp could shrink the chosen block_k (e.g. 256 ->
+    136 at k=130) to a shape the VMEM budget was never checked against."""
+    seen = {}
+    orig = ops.tsm2r_pallas
+
+    def spy(a, b, *, block_m, block_k, interpret=None):
+        seen.update(block_m=block_m, block_k=block_k)
+        return orig(a, b, block_m=block_m, block_k=block_k,
+                    interpret=interpret)
+
+    monkeypatch.setattr(ops, "tsm2r_pallas", spy)
+    m, k, n = 4096, 130, 8
+    a = _rand(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    b = _rand(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    got = ops.tsm2r(a, b, interpret=True)
+    bm, bk = perf_model.choose_params_tsm2r(m, k, n, perf_model.V5E, a.dtype)
+    assert (seen["block_m"], seen["block_k"]) == (bm, bk)
+    assert seen["block_k"] % perf_model.V5E.lane == 0
+    np.testing.assert_allclose(got, ref.tsm2r_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_tsmt_block_quantization_matches_model(monkeypatch):
+    """Same rule for the transposed kernel's lane dim (block_a)."""
+    seen = {}
+    orig = ops.tsmt_pallas
+
+    def spy(x, y, *, block_m, block_a, interpret=None):
+        seen.update(block_m=block_m, block_a=block_a)
+        return orig(x, y, block_m=block_m, block_a=block_a,
+                    interpret=interpret)
+
+    monkeypatch.setattr(ops, "tsmt_pallas", spy)
+    m, a_dim, b_dim = 4096, 130, 8
+    x = _rand(jax.random.PRNGKey(2), (m, a_dim), jnp.float32)
+    y = _rand(jax.random.PRNGKey(3), (m, b_dim), jnp.float32)
+    got = ops.tsmt(x, y, interpret=True)
+    bm, ba = perf_model.choose_params_tsmt(m, a_dim, b_dim, perf_model.V5E,
+                                           x.dtype)
+    assert (seen["block_m"], seen["block_a"]) == (bm, ba)
+    np.testing.assert_allclose(got, ref.tsmt_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # TSM2L: m >> k ~ n  (paper k = n in {8, 16}; m up to 1e7 -- scaled down)
 # ---------------------------------------------------------------------------

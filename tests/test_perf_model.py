@@ -1,0 +1,101 @@
+"""Parameter-chooser contracts: candidate enumeration, VMEM feasibility,
+and the documented tie-break rule (ties toward *deeper* pipelines along
+the streamed/reduction axis), applied uniformly to all three choosers.
+
+A zero-overhead spec (step_overhead = dma_latency = 0) collapses the
+latency term, making every reduction-axis block size model-time-equal --
+the exact boundary the tie-break rule governs. The old code preferred
+*larger* block_k on ties (shallower grids) and never applied any rule to
+the tsm2l/tsmt choosers.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import perf_model
+
+ZERO_LAT = dataclasses.replace(perf_model.V5E, step_overhead=0.0,
+                               dma_latency=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Tie-break boundaries
+# ---------------------------------------------------------------------------
+
+def test_tsm2r_ties_break_toward_deeper_k_pipeline():
+    """With latency terms zeroed, every feasible block_k ties (the B-refetch
+    term depends only on block_m): the chooser must take the smallest
+    block_k -- the deepest k-pipeline -- not the largest."""
+    m, k, n = 8192, 2048, 8
+    bm, bk = perf_model.choose_params_tsm2r(m, k, n, ZERO_LAT, jnp.bfloat16)
+    cands = perf_model.tsm2r_candidates(m, k, n, ZERO_LAT, jnp.bfloat16)
+    assert bk == min(c[1] for c in cands) == 128
+    # Residual tie on block_m resolved toward fewer B-window re-fetches:
+    # b_bytes scales with ceil(m/bm), so the largest bm wins *strictly*.
+    assert bm == 4096
+
+
+def test_tsm2r_no_tie_still_prefers_fewer_steps():
+    """With real latency terms, fewer grid steps win outright -- the
+    tie-break must not override a strict model-time ordering."""
+    bm, bk = perf_model.choose_params_tsm2r(4096, 1024, 8, perf_model.V5E,
+                                            jnp.bfloat16)
+    assert (bm, bk) == (4096, 1024)
+
+
+def test_tsm2l_ties_break_toward_deeper_m_pipeline():
+    m, k, n = 16384, 16, 16
+    bm = perf_model.choose_params_tsm2l(m, k, n, ZERO_LAT, jnp.bfloat16)
+    assert bm == min(perf_model.tsm2l_candidates(m, k, n, ZERO_LAT,
+                                                 jnp.bfloat16)) == 256
+
+
+def test_tsmt_ties_break_toward_deeper_reduction_pipeline():
+    """m is the streamed reduction for TSMT: ties on block_m go to the
+    smallest; block_a is resolved strictly (fewer Y re-fetches)."""
+    m, a, b = 4096, 1024, 8
+    bm, ba = perf_model.choose_params_tsmt(m, a, b, ZERO_LAT, jnp.bfloat16)
+    assert bm == 256
+    assert ba == max(c[1] for c in perf_model.tsmt_candidates(
+        m, a, b, ZERO_LAT, jnp.bfloat16)) == 1024
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration (the grid the autotuner shares)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,args", [
+    ("tsm2r", (20480, 20480, 16)),
+    ("tsm2l", (1_000_000, 16, 16)),
+    ("tsmt", (8192, 128, 8)),
+])
+def test_choice_is_always_a_candidate(kind, args):
+    cands = getattr(perf_model, f"{kind}_candidates")(*args)
+    choice = getattr(perf_model, f"choose_params_{kind}")(*args)
+    assert choice in cands
+
+
+def test_candidates_respect_vmem_budget():
+    budget = perf_model.V5E.vmem_bytes * perf_model.V5E.vmem_usable
+    for bm, bk in perf_model.tsm2r_candidates(30720, 30720, 16):
+        assert perf_model.tsm2r_vmem_usage(bm, bk, 16, jnp.bfloat16) <= budget
+    for bm in perf_model.tsm2l_candidates(1_000_000, 16, 16):
+        assert perf_model.tsm2l_vmem_usage(bm, 16, 16, jnp.bfloat16) <= budget
+    for bm, ba in perf_model.tsmt_candidates(8192, 512, 8):
+        assert perf_model.tsmt_vmem_usage(bm, ba, 8, jnp.bfloat16) <= budget
+
+
+def test_candidates_respect_shape_quantization():
+    """No candidate exceeds the lane/sublane roundup of the actual dims --
+    the same filter kernels/ops.py clamps the runtime blocks with."""
+    for bm, bk in perf_model.tsm2r_candidates(4096, 130, 8):
+        assert bm <= 4096
+        assert bk <= perf_model._roundup(130, perf_model.V5E.lane) == 256
+
+
+def test_tiny_shape_falls_back_to_single_block():
+    assert perf_model.tsm2r_candidates(64, 64, 4) == []
+    bm, bk = perf_model.choose_params_tsm2r(64, 64, 4)
+    assert (bm, bk) == (64, 128)
