@@ -7,7 +7,6 @@ case at m=1e7)."""
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from benchmarks.common import emit, rand, timeit_arm
 from repro.core import perf_model

@@ -1,0 +1,156 @@
+"""Bench-regression gate: compare a fresh BENCH_*.json against the
+committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline benchmarks/BENCH_baseline.json BENCH_<rev>.json
+
+Two classes of regression fail the gate (exit 1):
+
+* dispatch sanity -- every policy arm that hit its intended executor in
+  the baseline must still hit it. Arms new in the current report only
+  need to pass themselves; an arm dropped from the report entirely is a
+  failure (a silently deleted assertion is a regression too).
+* autotune model error -- per (kind, shape) row, the model-vs-measured
+  gap may not worsen by more than ``--tolerance`` (default 25%) relative
+  to baseline. The gap is measured as ``|ln(model_us / measured_us)``|
+  (the same log-scale objective ``autotune.calibrate`` minimizes), NOT
+  the report's ``model_error`` ratio -- that ratio saturates at 1.0 when
+  the model under-predicts (always the case in interpret mode, where
+  measured Python-loop times dwarf the modeled v5e times), so a bound on
+  it could never fire in the realistic direction. The log gap is
+  unbounded both ways. Interpret-mode timings on shared CI runners are
+  noisy, so rows only fail when they are ALSO more than ``--abs-floor``
+  (default 0.25 nats) above baseline; rows lacking the ``*_us`` fields
+  fall back to the ratio. Rows missing from the current report fail; new
+  rows are informational.
+
+Wall-clock section times are deliberately NOT gated -- on shared runners
+they swing far more than any real regression, and the autotuner's model
+error already tracks the kernel-level signal the paper cares about.
+
+This file is in the ruff-format ratchet set (see ci.yml) -- keep edits
+formatter-clean.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def _sanity_index(report):
+    return {row["arm"]: row for row in (report.get("dispatch_sanity") or [])}
+
+
+def _model_error_index(report):
+    rows = (report.get("autotune") or {}).get("model_error") or []
+    return {(r["kind"], r["m"], r["d1"], r["d2"]): r for r in rows}
+
+
+def _check_sanity(current, baseline, failures):
+    base_sanity = _sanity_index(baseline)
+    cur_sanity = _sanity_index(current)
+    for arm, base_row in base_sanity.items():
+        cur_row = cur_sanity.get(arm)
+        if cur_row is None:
+            failures.append(f"dispatch_sanity arm {arm!r} missing vs baseline")
+        elif base_row.get("ok") and not cur_row.get("ok"):
+            expected = cur_row.get("expected")
+            observed = cur_row.get("observed")
+            failures.append(
+                f"dispatch_sanity arm {arm!r} regressed: "
+                f"expected {expected}, observed {observed}"
+            )
+    for arm, cur_row in cur_sanity.items():
+        if arm not in base_sanity and not cur_row.get("ok"):
+            expected = cur_row.get("expected")
+            observed = cur_row.get("observed")
+            failures.append(
+                f"dispatch_sanity arm {arm!r} (new) failed: "
+                f"expected {expected}, observed {observed}"
+            )
+
+
+def _row_gap(row):
+    """Log-scale model gap for one row: |ln(model/measured)|, unbounded in
+    both directions; falls back to the saturating model_error ratio when a
+    report predates the ``*_us`` fields. None when neither is usable."""
+    model_us = row.get("model_us")
+    measured_us = row.get("measured_us")
+    if model_us and measured_us and model_us > 0 and measured_us > 0:
+        return abs(math.log(model_us / measured_us))
+    return row.get("model_error")
+
+
+def _check_model_error(current, baseline, tolerance, abs_floor, failures):
+    base_err = _model_error_index(baseline)
+    cur_err = _model_error_index(current)
+    for key, base_row in base_err.items():
+        cur_row = cur_err.get(key)
+        name = "autotune model gap {}@({}, {}, {})".format(*key)
+        if cur_row is None:
+            failures.append(f"{name} missing from the current report")
+            continue
+        base_e = _row_gap(base_row)
+        cur_e = _row_gap(cur_row)
+        if base_e is None or cur_e is None:
+            failures.append(f"{name} lacks model/measured fields")
+            continue
+        if cur_e > base_e * (1 + tolerance) and cur_e > base_e + abs_floor:
+            failures.append(
+                f"{name} worsened {base_e:.3f} -> {cur_e:.3f} nats "
+                f"(> {tolerance:.0%} over baseline and > +{abs_floor} absolute)"
+            )
+
+
+def check(current, baseline, tolerance=0.25, abs_floor=0.25):
+    """Return a list of human-readable failures (empty = gate passes)."""
+    failures = []
+    _check_sanity(current, baseline, failures)
+    _check_model_error(current, baseline, tolerance, abs_floor, failures)
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh BENCH_*.json to gate")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="relative model-error worsening allowed (0.25 = 25%%)",
+    )
+    ap.add_argument(
+        "--abs-floor",
+        type=float,
+        default=0.25,
+        help="absolute log-gap slack in nats (noise floor for CI runners)",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = check(
+        current, baseline, tolerance=args.tolerance, abs_floor=args.abs_floor
+    )
+    if failures:
+        print(f"bench-regression gate: {len(failures)} failure(s) vs {args.baseline}:")
+        for msg in failures:
+            print(f"  - {msg}")
+        sys.exit(1)
+    n_arms = len(_sanity_index(current))
+    n_rows = len(_model_error_index(current))
+    print(
+        f"bench-regression gate: OK ({n_arms} dispatch arms, {n_rows} "
+        f"model-error rows within {args.tolerance:.0%} of {args.baseline})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -55,7 +55,12 @@ def timeit_arm(fn, *args, policy=None, expect_executors=None, reps: int = 5,
 def dispatch_sanity(m: int = 4096, k: int = 512, n: int = 8):
     """One row per canonical policy arm: did a fresh jit under that policy
     hit the executor the policy intends? Emitted into the --json report so
-    CI can fail on silent dispatch regressions."""
+    CI can fail on silent dispatch regressions (benchmarks/
+    check_regression.py gates on these rows vs the committed baseline).
+
+    On a >1-device backend two mesh arms join: ``tsmm_t`` under a DP mesh
+    must land on ``shard_map`` (reduce="psum", replicated output) and on
+    ``shard_map-scatter`` (reduce="psum_scatter", sharded output)."""
     a, b = rand(0, (m, k)), rand(1, (k, n))
     arms = [
         ("dense", tsmm.GemmPolicy(mode="dense"), "dense-xla"),
@@ -69,6 +74,34 @@ def dispatch_sanity(m: int = 4096, k: int = 512, n: int = 8):
         observed = sorted({e.executor for e in log})
         out.append({"arm": name, "shape": [m, k, n], "expected": expect,
                     "observed": observed, "ok": observed == [expect]})
+    devs = jax.devices()
+    # The mesh arms need a per-shard shape that still classifies tsmt and
+    # a scatter dim that divides the shard count: scale the tall dim with
+    # the device count and skip when 64 rows can't tile the shards (odd
+    # or >64-device backends) rather than emit guaranteed-false rows.
+    if len(devs) > 1 and 64 % len(devs) == 0:
+        from jax.sharding import Mesh
+        import numpy as np
+        mesh = Mesh(np.array(devs), ("data",))
+        m_mesh = 2048 * len(devs)
+        x, y = rand(2, (m_mesh, 64)), rand(3, (m_mesh, n))
+        mesh_arms = [
+            ("mesh_psum", tsmm.GemmPolicy(reduce="psum"), "shard_map"),
+            ("mesh_psum_scatter", tsmm.GemmPolicy(reduce="psum_scatter"),
+             "shard_map-scatter"),
+        ]
+        for name, pol, expect in mesh_arms:
+            with mesh:
+                _, log = jit_isolated(lambda x_, y_: tsmm.tsmm_t(x_, y_),
+                                      x, y, policy=pol)
+            observed = sorted({e.executor for e in log})
+            # Exact set, like the base arms: the outer executor plus the
+            # per-shard kernel re-dispatch and NOTHING else -- an extra
+            # dense-xla sneaking into the trace is a dispatch regression.
+            expected = sorted({expect, "pallas-tpu"})
+            out.append({"arm": name, "shape": [m_mesh, 64, n],
+                        "expected": expected, "observed": observed,
+                        "ok": observed == expected})
     return out
 
 

@@ -141,6 +141,8 @@ def build_report(section_results, autotune=None, dispatch_sanity=None):
             "spec": pol.spec.name,
             "interpret": pol.interpret,
             "shard_map": pol.shard_map,
+            "reduce": pol.reduce,
+            "dp_axes": list(pol.dp_axes) if pol.dp_axes else None,
             "tuning_table_records": len(tbl.records) if tbl is not None else 0,
         },
         "sections": {},
@@ -182,8 +184,9 @@ def main(argv=None) -> None:
                     help="override autotune shapes: kind:m,k,n;kind:m,k,n")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_ab, bench_ablation, bench_e2e, bench_params,
-                            bench_rect, bench_tsm2l, bench_tsm2r)
+    from benchmarks import (bench_ab, bench_ablation, bench_collectives,
+                            bench_e2e, bench_params, bench_rect, bench_tsm2l,
+                            bench_tsm2r)
     sections = [
         ("Fig6/7+10/11: TSM2R speedup + utilization", bench_tsm2r.run),
         ("Fig5+13/14: TSM2L tcf sweep + speedup", bench_tsm2l.run),
@@ -191,6 +194,7 @@ def main(argv=None) -> None:
         ("Table3/4: kernel parameters + bound classes", bench_params.run),
         ("Fig6 ladder: V0->V3 ablation", bench_ablation.run),
         ("A/B: policy arms, jit-cache isolated", bench_ab.run),
+        ("collectives: psum vs psum_scatter tsmm_t arms", bench_collectives.run),
         ("e2e: train/decode step throughput", bench_e2e.run),
     ]
     if args.sections:

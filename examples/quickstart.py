@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import perf_model, tsmm
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 key = jax.random.PRNGKey(0)
 

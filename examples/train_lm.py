@@ -11,7 +11,6 @@ one CPU core a few hundred steps takes hours -- size it to your hardware):
 """
 
 import argparse
-import dataclasses
 import sys
 
 from repro.configs.base import ModelConfig

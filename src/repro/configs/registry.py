@@ -2,10 +2,10 @@
 
 from __future__ import annotations
 
-from repro.configs import (base, chatglm3_6b, deepseek_v3_671b, hubert_xlarge,
+from repro.configs import (chatglm3_6b, deepseek_v3_671b, hubert_xlarge,
                            llama3p2_3b, llama3p2_vision_11b, mistral_nemo_12b,
                            mixtral_8x7b, qwen2_72b, rwkv6_1p6b, zamba2_1p2b)
-from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.base import SHAPES, ModelConfig
 
 _MODULES = {
     "zamba2-1.2b": zamba2_1p2b,

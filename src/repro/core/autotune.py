@@ -302,23 +302,32 @@ def _kind_plan(kind: str, m: int, d1: int, d2: int, spec, dtype,
         cands = [{"block_m": bm, "block_k": bk}
                  for bm, bk in perf_model.tsm2r_candidates(m, d1, d2,
                                                           explored, dtype)]
-        model = lambda p: perf_model.tsm2r_model_time(
-            m, d1, d2, p["block_m"], p["block_k"], spec, dtype)
+
+        def model(p):
+            return perf_model.tsm2r_model_time(
+                m, d1, d2, p["block_m"], p["block_k"], spec, dtype)
+
         bm, bk = perf_model.choose_params_tsm2r(m, d1, d2, spec, dtype)
         pick = {"block_m": bm, "block_k": bk}
     elif kind == "tsm2l":
         cands = [{"block_m": bm}
                  for bm in perf_model.tsm2l_candidates(m, d1, d2,
                                                       explored, dtype)]
-        model = lambda p: perf_model.tsm2l_model_time(
-            m, d1, d2, p["block_m"], spec, dtype)
+
+        def model(p):
+            return perf_model.tsm2l_model_time(
+                m, d1, d2, p["block_m"], spec, dtype)
+
         pick = {"block_m": perf_model.choose_params_tsm2l(m, d1, d2, spec, dtype)}
     elif kind == "tsmt":
         cands = [{"block_m": bm, "block_a": ba}
                  for bm, ba in perf_model.tsmt_candidates(m, d1, d2,
                                                          explored, dtype)]
-        model = lambda p: perf_model.tsmt_model_time(
-            m, d1, d2, p["block_m"], p["block_a"], spec, dtype)
+
+        def model(p):
+            return perf_model.tsmt_model_time(
+                m, d1, d2, p["block_m"], p["block_a"], spec, dtype)
+
         bm, ba = perf_model.choose_params_tsmt(m, d1, d2, spec, dtype)
         pick = {"block_m": bm, "block_a": ba}
     else:

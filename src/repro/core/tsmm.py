@@ -38,9 +38,26 @@ shape to an executor:
   replaces the old hard guard that sent every call under a multi-chip
   ``with mesh:`` scope to the dense path: when the tall dim divides the DP
   axes and the per-shard shape still classifies tall-skinny, the kernels
-  now run per shard (``tsmm_t`` psums the per-shard partial products).
+  now run per shard (``tsmm_t`` reduces the per-shard partial products
+  per ``GemmPolicy.reduce``: psum by default, stacked partials on
+  ``reduce="none"``),
+* ``shard_map-scatter`` -- the sharded-*output* variant for ``tsmm_t``:
+  per-shard partials are combined with ``psum_scatter`` instead of a full
+  ``psum``, so the (small) ``a x b`` product comes back row-sharded over
+  the DP axes instead of replicated. Selected automatically for ``mmt``
+  dispatch when the policy asks ``reduce="psum_scatter"`` and the output
+  rows divide the DP shard count; this is the path for consumers that
+  keep the product sharded (PowerSGD factors, ZeRO-sharded optimizer
+  grads) and removes the structural all-gather between the kernel and
+  those consumers.
 
 ``register_executor`` adds new backends; ``GemmPolicy.executor`` pins one.
+
+DP axes are no longer a hard-coded convention: with
+``GemmPolicy.dp_axes=None`` the dispatcher derives them from the ambient
+mesh via :func:`derive_dp_axes` (conventional DP names first, then any
+axis not named like a model/pipeline axis; a single-axis mesh is always
+DP). An explicit ``dp_axes=(...)`` still overrides.
 
 Both entries are differentiable: the ops they dispatch to carry custom_vjp
 rules that take the policy through their nondiff args, so the backward
@@ -82,6 +99,7 @@ __all__ = [
     "tsmm",
     "tsmm_t",
     "bound_class",
+    "derive_dp_axes",
     "register_executor",
     "unregister_executor",
     "executors",
@@ -98,15 +116,27 @@ MIN_TALL = 2048
 MAX_SKINNY_T = 512
 SKINNY_RATIO_T = SKINNY_RATIO // 4
 
-# The repo-wide convention for which mesh axes carry the batch
-# (distributed/sharding.dp_axes filters against this too). A policy can
-# override per scope via GemmPolicy.dp_axes.
+# The repo-wide *convention* for which mesh axes carry the batch. These are
+# no longer the only names the dispatcher understands: they seed
+# ``derive_dp_axes``, which reads the ambient mesh (see below). A policy can
+# still pin axes per scope via GemmPolicy.dp_axes.
 DP_AXIS_NAMES = ("pod", "data")
+
+# Names treated as data-parallel when deriving dp axes from a mesh, in
+# addition to DP_AXIS_NAMES, and names that mark an axis as model/pipeline
+# parallel (never DP). Anything in neither set is DP only when no
+# conventional DP name is present on the mesh.
+_DP_NAME_HINTS = DP_AXIS_NAMES + ("dp", "batch", "replica", "replicas")
+_MODEL_NAME_HINTS = frozenset({
+    "model", "tensor", "tp", "mp", "expert", "experts", "ep",
+    "pipe", "pipeline", "stage", "pp", "seq", "sequence", "sp",
+})
 
 _MM_KINDS = ("auto", "dense", "tsm2r", "tsm2l")
 _MMT_KINDS = ("auto", "dense", "tsmt")
 _ALL_MODES = ("auto", "dense", "tsm2r", "tsm2l", "tsmt")
 _SHARD_MAP_MODES = ("auto", "never", "require", "local")
+_REDUCE_MODES = ("psum", "psum_scatter", "none")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,9 +186,36 @@ class GemmPolicy:
     ignores the mesh context entirely and dispatches on the shapes as seen
     -- what the shard_map executor sets for its per-shard bodies, and what
     call sites inside their *own* shard_map should scope.
-    ``dp_axes``: mesh axis names carrying the batch; None = the repo
-    convention (``DP_AXIS_NAMES``, shared with ``distributed.sharding``).
+    ``dp_axes``: mesh axis names carrying the batch; None = derive from
+    the ambient mesh (:func:`derive_dp_axes` -- conventional DP names
+    first, then non-model-named axes; shared with
+    ``distributed.sharding``). An explicit tuple is filtered against the
+    mesh's axis names but otherwise taken as-is.
     ``executor``: pin a registered backend by name, bypassing selection.
+
+    ``reduce``: how ``tsmm_t``'s per-shard partial products combine under
+    the shard_map executors (it has no effect outside a multi-chip mesh
+    scope, and none on the ``tsmm`` entry, whose shards never reduce):
+
+    * "psum" (default) -- full all-reduce; output replicated. The drop-in
+      semantics every caller had before this knob existed.
+    * "psum_scatter" -- reduce-scatter; the global (a, b) output is
+      row-sharded over the DP axes. Same global shape and values as
+      "psum", different layout: consumers that immediately re-shard or
+      only touch their own rows (PowerSGD factors, ZeRO-1 optimizer
+      shards) skip the all-gather half of the all-reduce. Falls back to
+      dense-xla when the output rows don't divide the shard count
+      (shard_map="require" raises instead).
+    * "none" -- no collective: shards return their *partial* products,
+      stacked, so the global output is (shards * a, b). For callers that
+      run their own reduction schedule. Never auto-selected over
+      "psum"-shaped consumers' objections: you only get it by setting it.
+
+    Backward passes re-dispatch with the *matching* collective
+    (``backward_policy`` keeps ``reduce`` -- a psum_scatter scope keeps
+    its weight-gradient ``tsmm_t``s sharded too), except "none", which
+    downgrades to "psum" so cotangent shapes stay equal to primal shapes
+    (custom_vjp requires it).
 
     ``tuning_table``: a ``core.autotune.TuningTable`` of measured-best
     block params (None = pure analytic choice). When set, ``kernels/ops``
@@ -182,6 +239,7 @@ class GemmPolicy:
     dp_axes: tuple[str, ...] | None = None
     executor: str | None = None
     tuning_table: object | None = None
+    reduce: str = "psum"
 
     def __post_init__(self):
         if self.mode not in _ALL_MODES:
@@ -192,6 +250,10 @@ class GemmPolicy:
             raise ValueError(
                 f"unknown GemmPolicy shard_map {self.shard_map!r}: valid "
                 f"values are {', '.join(_SHARD_MAP_MODES)}")
+        if self.reduce not in _REDUCE_MODES:
+            raise ValueError(
+                f"unknown GemmPolicy reduce {self.reduce!r}: valid "
+                f"values are {', '.join(_REDUCE_MODES)}")
 
     def with_(self, **overrides) -> "GemmPolicy":
         return dataclasses.replace(self, **overrides)
@@ -273,13 +335,18 @@ def policy(base: GemmPolicy | None = None, /, **overrides):
 
 def backward_policy(p: GemmPolicy) -> GemmPolicy:
     """Policy for VJP re-dispatch: keep the caller's scope (spec,
-    thresholds, interpret, a full-dense pin) but drop a forward-kind force
-    and any executor pin -- cotangent shapes classify for themselves, and
-    a pinned ``shard_map`` executor must not recurse per-shard."""
+    thresholds, interpret, a full-dense pin, the ``reduce`` collective)
+    but drop a forward-kind force and any executor pin -- cotangent shapes
+    classify for themselves, and a pinned ``shard_map`` executor must not
+    recurse per-shard. ``reduce="none"`` downgrades to "psum": a stacked-
+    partials gradient would change the cotangent's shape, which custom_vjp
+    forbids; "psum_scatter" is kept, so weight-gradient ``tsmm_t``s in the
+    backward land sharded without an extra all-gather."""
     mode = p.mode if p.mode in ("auto", "dense") else "auto"
-    if mode == p.mode and p.executor is None:
+    reduce_ = "psum" if p.reduce == "none" else p.reduce
+    if mode == p.mode and p.executor is None and reduce_ == p.reduce:
         return p
-    return dataclasses.replace(p, mode=mode, executor=None)
+    return dataclasses.replace(p, mode=mode, executor=None, reduce=reduce_)
 
 
 def enabled() -> bool:
@@ -414,28 +481,54 @@ def _exec_interpret(entry, kind, a, b, p):
                         dataclasses.replace(p, interpret=True))
 
 
+def derive_dp_axes(mesh) -> tuple[str, ...]:
+    """Data-parallel axes of ``mesh``, derived from its axis *names*.
+
+    Rules, in order (mesh axis order is preserved in the result):
+
+    1. axes named by the DP convention (``DP_AXIS_NAMES`` plus
+       "dp"/"batch"/"replica(s)") are DP when any is present;
+    2. otherwise every axis whose name does not hint model/pipeline
+       parallelism ("model", "tensor", "tp", "expert", "pipe", "stage",
+       "seq", ...) counts as DP -- including a single-axis mesh with a
+       novel name, which is pure DP.
+
+    A model-named axis is NEVER derived as DP, even alone: a pure
+    tensor-parallel ``("model",)`` mesh keeps the dense fallback (GSPMD
+    partitions the dense dot along the model axis correctly; sharding the
+    batch over it would be a silently wrong layout).
+
+    Works on Mesh and AbstractMesh (only ``axis_names`` is read). May
+    return () -- e.g. a pure ("model", "pipe") mesh has no DP axes, and
+    the dispatcher then falls back to dense exactly like the old guard.
+    """
+    names = tuple(mesh.axis_names)
+    conv = tuple(a for a in names if a in _DP_NAME_HINTS)
+    if conv:
+        return conv
+    return tuple(a for a in names if a not in _MODEL_NAME_HINTS)
+
+
 def _dp_axes(mesh, p: GemmPolicy) -> tuple[str, ...]:
-    names = p.dp_axes if p.dp_axes is not None else DP_AXIS_NAMES
-    return tuple(a for a in names if a in mesh.axis_names)
+    if p.dp_axes is not None:
+        return tuple(a for a in p.dp_axes if a in mesh.axis_names)
+    return derive_dp_axes(mesh)
 
 
 def _axes_size(mesh, axes) -> int:
+    sizes = compat.mesh_axis_sizes(mesh)
     size = 1
     for a in axes:
-        size *= mesh.shape[a]
+        size *= sizes[a]
     return size
 
 
-def _exec_shard_map(entry, kind, a, b, p):
-    """Per-shard dispatch over the DP axes of the context mesh.
+def _shard_map_env(p: GemmPolicy):
+    """(mesh, dp axes, inner per-shard policy) for the shard_map executors.
 
-    ``mm``: the tall dim shards, B replicates; each shard re-enters the
-    dispatcher on its local (still tall-skinny) shape. ``mmt``: both
-    operands shard over the tall reduction; per-shard partial products are
-    psum'd (the output is replicated). The inner policy disables shard_map
-    so per-shard re-dispatch cannot recurse.
+    The inner policy dispatches on local shapes (``shard_map="local"``)
+    and drops the executor pin so per-shard re-dispatch cannot recurse.
     """
-    del kind
     mesh = compat.get_context_mesh()
     if mesh is None:
         raise RuntimeError("shard_map executor requires an active "
@@ -444,13 +537,47 @@ def _exec_shard_map(entry, kind, a, b, p):
     if not dp:
         raise RuntimeError(
             f"shard_map executor found no data-parallel axes on mesh "
-            f"{mesh.axis_names} (policy dp_axes={p.dp_axes})")
+            f"{mesh.axis_names} (policy dp_axes={p.dp_axes}; derived axes "
+            f"follow tsmm.derive_dp_axes)")
     inner = dataclasses.replace(p, shard_map="local", executor=None)
+    return mesh, dp, inner
+
+
+def _exec_shard_map(entry, kind, a, b, p):
+    """Per-shard dispatch over the DP axes of the context mesh.
+
+    ``mm``: the tall dim shards, B replicates; each shard re-enters the
+    dispatcher on its local (still tall-skinny) shape. ``mmt``: both
+    operands shard over the tall reduction; per-shard partial products
+    combine per ``p.reduce`` -- psum'd to a replicated output (default),
+    or returned as stacked partials (``reduce="none"``: global output is
+    (shards * a, b), the caller owns the reduction). The scatter variant
+    lives in its own executor (``shard_map-scatter``).
+    """
+    del kind
+    mesh, dp, inner = _shard_map_env(p)
     if entry == "mm":
         f = compat.shard_map(
             lambda a_s, b_s: tsmm(a_s, b_s, policy=inner),
             mesh=mesh,
             in_specs=(PartitionSpec(dp, None), PartitionSpec(None, None)),
+            out_specs=PartitionSpec(dp, None))
+        return f(a, b)
+    if p.reduce == "psum_scatter":
+        # Auto-selection never lands here with a scatter scope; only an
+        # explicit executor="shard_map" pin can. Refuse rather than psum:
+        # the caller asked for a row-sharded layout and must not silently
+        # get a replicated one.
+        raise RuntimeError(
+            "GemmPolicy pins executor='shard_map' but reduce="
+            "'psum_scatter': the sharded-output layout lives on the "
+            "'shard_map-scatter' executor -- pin that instead, or drop "
+            "the pin and let selection match the collective")
+    if p.reduce == "none":
+        f = compat.shard_map(
+            lambda x_s, y_s: tsmm_t(x_s, y_s, policy=inner),
+            mesh=mesh,
+            in_specs=(PartitionSpec(dp, None), PartitionSpec(dp, None)),
             out_specs=PartitionSpec(dp, None))
         return f(a, b)
     f = compat.shard_map(
@@ -461,10 +588,52 @@ def _exec_shard_map(entry, kind, a, b, p):
     return f(a, b)
 
 
+def _exec_shard_map_scatter(entry, kind, a, b, p):
+    """Sharded-output ``tsmm_t``: per-shard partials reduce-scatter over
+    the DP axes, so the global (a, b) product comes back row-sharded
+    instead of replicated -- same values as the psum path, minus the
+    all-gather half of the all-reduce the consumer was about to undo.
+    ``mm`` has no cross-shard reduction to scatter, so this executor is
+    mmt-only (pinning it via ``GemmPolicy.executor`` around a ``tsmm``
+    call raises).
+    """
+    del kind
+    if entry != "mmt":
+        raise RuntimeError(
+            "the shard_map-scatter executor only applies to tsmm_t (its "
+            "output is the cross-shard reduction being scattered); tsmm "
+            "has nothing to scatter -- use the shard_map executor")
+    if p.reduce != "psum_scatter":
+        # Only reachable via an explicit executor pin (selection matches
+        # executors to the collective): a psum/none scope pinned onto the
+        # scatter executor would silently change the output layout (or,
+        # for "none", the shape) the caller's reduce= asked for.
+        raise RuntimeError(
+            f"GemmPolicy pins executor='shard_map-scatter' but reduce="
+            f"{p.reduce!r}: the scatter executor implements exactly "
+            "reduce='psum_scatter' -- set that, or drop the pin")
+    mesh, dp, inner = _shard_map_env(p)
+    shards = _axes_size(mesh, dp)
+    if a.shape[1] % shards != 0:
+        raise RuntimeError(
+            f"psum_scatter output rows ({a.shape[1]}) do not divide the "
+            f"{shards} shards of dp axes {dp}; auto-selection falls back "
+            "to dense for this shape -- only an explicit executor pin "
+            "reaches this error")
+    f = compat.shard_map(
+        lambda x_s, y_s: compat.psum_scatter(
+            tsmm_t(x_s, y_s, policy=inner), dp),
+        mesh=mesh,
+        in_specs=(PartitionSpec(dp, None), PartitionSpec(dp, None)),
+        out_specs=PartitionSpec(dp, None))
+    return f(a, b)
+
+
 register_executor("dense-xla", _exec_dense_xla)
 register_executor("pallas-tpu", _exec_pallas)
 register_executor("interpret", _exec_interpret)
 register_executor("shard_map", _exec_shard_map)
+register_executor("shard_map-scatter", _exec_shard_map_scatter)
 
 
 # ---------------------------------------------------------------------------
@@ -499,13 +668,23 @@ def _select_executor(entry: str, kind: str, m_tall: int, d1: int, d2: int,
                      if entry == "mm"
                      else classify_gemm_t(m_tall // shards, d1, d2, p))
             ok = local != "dense"
+        scatter = entry == "mmt" and p.reduce == "psum_scatter"
+        if ok and scatter:
+            # The scatter dim is the OUTPUT's leading dim (d1, the rows of
+            # X^T Y); when it doesn't tile over the shards the sharded
+            # output cannot exist -- dense fallback, not a silent psum
+            # (callers asking for sharded layout must not silently get a
+            # replicated one).
+            ok = d1 % shards == 0
         if ok:
-            return "shard_map"
+            return "shard_map-scatter" if scatter else "shard_map"
         if p.shard_map == "require":
             raise RuntimeError(
                 f"GemmPolicy(shard_map='require') but shape "
                 f"({m_tall}, {d1}, {d2}) cannot shard over dp axes "
-                f"{dp or '(none)'} of mesh {dict(mesh.shape)}")
+                f"{dp or '(none)'} of mesh "
+                f"{compat.mesh_axis_sizes(mesh)}"
+                + (" with reduce='psum_scatter'" if scatter else ""))
         return "dense-xla"
     if p.interpret:
         return "interpret"

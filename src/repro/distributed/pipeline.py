@@ -71,9 +71,9 @@ def pipeline_apply(stage_fn, stage_params, microbatches, *,
 def split_stages(layer_params, n_stages: int):
     """Reshape (L, ...) stacked layer params into (S, L/S, ...)."""
     def one(x):
-        l = x.shape[0]
-        assert l % n_stages == 0, (l, n_stages)
-        return x.reshape(n_stages, l // n_stages, *x.shape[1:])
+        n_layers = x.shape[0]
+        assert n_layers % n_stages == 0, (n_layers, n_stages)
+        return x.reshape(n_stages, n_layers // n_stages, *x.shape[1:])
     return jax.tree.map(one, layer_params)
 
 

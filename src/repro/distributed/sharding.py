@@ -41,7 +41,14 @@ def abstract_mesh(axis_sizes, axis_names):
 
 
 def dp_axes(mesh: Mesh):
-    return tuple(a for a in tsmm.DP_AXIS_NAMES if a in mesh.axis_names)
+    """Data-parallel axes of ``mesh``. Shares one derivation with the GEMM
+    dispatcher (``tsmm.derive_dp_axes``): conventional names
+    ('pod'/'data'/'dp'/'batch'/'replica') when present, otherwise any
+    non-model-named axis; a single-axis mesh is always DP. Batch specs,
+    PowerSGD reductions, and the shard_map executors therefore agree on
+    which axes carry the batch without the ("pod", "data") names being
+    hard-coded anywhere."""
+    return tsmm.derive_dp_axes(mesh)
 
 
 def _axis_size(mesh: Mesh, axis) -> int:

@@ -29,10 +29,21 @@ Shims and the version ranges they cover:
 * ``get_context_mesh()`` -- the ``with mesh:`` context mesh, read through
   the public ``jax.interpreters.pxla`` surface (the dispatcher must never
   import ``jax._src``). Returns None outside a mesh scope.
+* ``mesh_axis_sizes(mesh)`` -- ``{axis_name: size}`` for a Mesh or
+  AbstractMesh. ``mesh.shape`` is an OrderedDict on the versions covered
+  but has drifted (plain dict / ``axis_sizes`` tuple) -- callers that only
+  need names x sizes go through this instead of touching ``.shape``.
 * ``shard_map(...)`` -- lived in ``jax.experimental.shard_map`` through
   0.5.x and moved to ``jax.shard_map`` later; ``check_rep`` was also
   renamed away. The wrapper takes the modern keyword signature and drops
   kwargs the installed JAX rejects.
+* ``psum_scatter(x, axis)`` / ``all_gather(x, axis)`` -- the collective
+  pair the sharded-output ``tsmm_t`` path is built on.
+  ``lax.psum_scatter(..., tiled=True)`` has been stable since well before
+  0.4.30, but the ``tiled`` kwarg is the part most likely to drift (it
+  already changed semantics once in jax's history), so both wrappers pin
+  the tiled calling convention here and fall back to an explicit
+  psum+slice / concat emulation if the installed JAX rejects it.
 * ``auto_interpret()`` -- the Pallas interpret-mode default: kernel bodies
   run in Python off-TPU (correctness on CPU), compile via Mosaic on TPU.
 
@@ -54,7 +65,10 @@ __all__ = [
     "optimization_barrier",
     "BARRIER_IS_DIFFERENTIABLE",
     "get_context_mesh",
+    "mesh_axis_sizes",
     "shard_map",
+    "psum_scatter",
+    "all_gather",
     "auto_interpret",
 ]
 
@@ -180,6 +194,69 @@ def shard_map(f, *, mesh, in_specs, out_specs):
     except TypeError:  # pragma: no cover - post-rename JAX
         return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    """``{axis_name: size}`` for a Mesh/AbstractMesh, tolerant of the
+    ``.shape`` container drifting (OrderedDict today; ``axis_sizes`` tuple
+    on the explicit-sharding branches)."""
+    shape = getattr(mesh, "shape", None)
+    if shape is not None and hasattr(shape, "items"):
+        return dict(shape)
+    sizes = getattr(mesh, "axis_sizes", None)  # pragma: no cover - drift
+    if sizes is not None:
+        return dict(zip(mesh.axis_names, sizes))
+    raise TypeError(  # pragma: no cover - future-JAX drift
+        f"cannot read axis sizes off mesh {mesh!r}; extend "
+        "repro.kernels.compat.mesh_axis_sizes for this JAX version")
+
+
+# ---------------------------------------------------------------------------
+# Collectives for sharded-output tsmm_t (psum_scatter / all_gather)
+# ---------------------------------------------------------------------------
+
+def psum_scatter(x, axis_name, *, scatter_dimension: int = 0):
+    """Tiled reduce-scatter over ``axis_name`` (a name or tuple of names).
+
+    Semantics pinned here: the *global* result equals ``lax.psum(x, axis)``
+    with each shard keeping only its ``scatter_dimension`` slab -- i.e.
+    ``lax.psum_scatter(..., tiled=True)``. Requires
+    ``x.shape[scatter_dimension]`` divisible by the axis size (callers
+    check; the tsmm dispatcher falls back to dense when it doesn't).
+    """
+    try:
+        return jax.lax.psum_scatter(x, axis_name,
+                                    scatter_dimension=scatter_dimension,
+                                    tiled=True)
+    except TypeError:  # pragma: no cover - tiled-kwarg drift
+        summed = jax.lax.psum(x, axis_name)
+        idx = _flat_axis_index(axis_name)
+        size = jax.lax.psum(1, axis_name)
+        slab = x.shape[scatter_dimension] // size
+        return jax.lax.dynamic_slice_in_dim(summed, idx * slab, slab,
+                                            axis=scatter_dimension)
+
+
+def all_gather(x, axis_name, *, axis: int = 0):
+    """Tiled all-gather over ``axis_name``: shards concatenate along
+    ``axis`` (the inverse of :func:`psum_scatter` on the same axis)."""
+    try:
+        return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
+    except TypeError:  # pragma: no cover - tiled-kwarg drift
+        # Untiled all_gather inserts a new leading dim of the axis size at
+        # position ``axis``; tiled merges it into the next dim.
+        stacked = jax.lax.all_gather(x, axis_name, axis=axis)
+        merged = stacked.shape[axis] * stacked.shape[axis + 1]
+        return stacked.reshape(*x.shape[:axis], merged, *x.shape[axis + 1:])
+
+
+def _flat_axis_index(axis_name):
+    """Row-major flat index over one axis name or a tuple of names."""
+    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    idx = 0
+    for name in names:
+        idx = idx * jax.lax.psum(1, name) + jax.lax.axis_index(name)
+    return idx
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,15 @@ the scoped thresholds, so gradients stay inside the tall-skinny regime
 instead of falling back to XLA dense dots; shapes that leave the regime
 degrade to ``dot_general`` exactly like the forward dispatcher does.
 
+Under a multi-chip mesh the backward re-dispatch also keeps the caller's
+*collective*: ``tsmm.backward_policy`` preserves ``GemmPolicy.reduce``, so
+in a ``reduce="psum_scatter"`` scope the weight-gradient ``tsmm_t``s here
+(``Bbar = A^T Chat``) land on the ``shard_map-scatter`` executor and come
+back row-sharded over the DP axes -- no all-gather between the kernel and
+a ZeRO-sharded optimizer. Only ``reduce="none"`` is rewritten (to "psum"):
+stacked partials would change the cotangent shape, which custom_vjp
+forbids.
+
 ``spec=`` / ``interpret=`` kwargs are kept as per-call overrides of the
 corresponding policy fields (prefer ``with tsmm.policy(...)`` scopes).
 """

@@ -18,7 +18,6 @@ code path runs with the host mesh (--smoke uses reduced configs).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 import sys
 import time

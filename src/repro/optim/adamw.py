@@ -14,7 +14,7 @@ Features needed at scale:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -38,10 +38,12 @@ def _state_dtype(cfg: AdamWConfig, p):
 
 
 def init(cfg: AdamWConfig, params):
-    zeros = lambda p: {
-        "m": jnp.zeros(p.shape, _state_dtype(cfg, p)),
-        "v": jnp.zeros(p.shape, _state_dtype(cfg, p)),
-    }
+    def zeros(p):
+        return {
+            "m": jnp.zeros(p.shape, _state_dtype(cfg, p)),
+            "v": jnp.zeros(p.shape, _state_dtype(cfg, p)),
+        }
+
     return {
         "step": jnp.zeros((), jnp.int32),
         "moments": jax.tree.map(zeros, params),

@@ -18,6 +18,21 @@ compression can sit inside traced/differentiated train steps. Routing
 follows the active ``tsmm.policy(...)`` scope (or an explicit ``policy=``
 passed here); ``with tsmm.policy(mode="dense")`` A/Bs the whole protocol
 against stock XLA dots.
+
+Two executions of the same protocol:
+
+* ``compress_one``/``compress_tree`` -- the replicated oracle: the caller
+  supplies a mean-``psum`` and both factors come back replicated on every
+  DP rank. Works anywhere (also single-device with ``psum=None``).
+* ``compress_one_sharded``/``compress_tree_sharded`` -- for call sites
+  living *inside* their own ``shard_map`` over the DP axis: the big Q
+  factor (d2 x r) is mean-reduced with ``psum_scatter`` and its state
+  stays row-sharded end-to-end (1/N of the factor memory per rank, and
+  the blocking factor reduction halves to the scatter half of the
+  all-reduce; the gather halves ride the points that need full Q anyway).
+  Numerically identical to the oracle -- psum == psum_scatter + all_gather
+  -- which tests/test_scatter_shard_map.py pins under a real 2-device
+  mesh.
 """
 
 from __future__ import annotations
@@ -26,8 +41,10 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import tsmm
+from repro.kernels import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +103,102 @@ def compress_one(cfg: PowerSGDConfig, grad, st, *, psum=None, policy=None,
     approx = p @ q.T
     err = g - approx
     return approx, dict(st, err=err, q=q)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-factor variant (inside the caller's shard_map over the DP axis)
+# ---------------------------------------------------------------------------
+
+def shard_state(state, axis):
+    """Slice each per-param Q to this rank's row shard (call INSIDE the
+    shard_map body, once, e.g. on the first step): (d2, r) -> (d2/N, r).
+    Error-feedback buffers stay full (they are rank-local state). Q rows
+    that don't divide the axis size keep the full Q -- ``compress_one_
+    sharded`` then simply gathers a no-op and scatters nothing for it, so
+    mixed trees degrade per-leaf, not wholesale."""
+    size = lax.psum(1, axis)
+    idx = lax.axis_index(axis)
+
+    def one(st):
+        if st is None:
+            return None
+        q = st["q"]
+        if q.shape[0] % size != 0:
+            return st
+        slab = q.shape[0] // size
+        return dict(st, q=lax.dynamic_slice_in_dim(q, idx * slab, slab, 0))
+
+    return jax.tree.map(
+        one, state,
+        is_leaf=lambda x: x is None or (isinstance(x, dict) and "q" in x))
+
+
+def compress_one_sharded(cfg: PowerSGDConfig, grad, st, *, axis,
+                         policy=None):
+    """One grad through the protocol with the Q factor kept row-sharded
+    over mesh axis ``axis``. Must run inside a ``shard_map`` over that
+    axis; ``st["q"]`` holds this rank's (d2/N, r) shard (see
+    :func:`shard_state`).
+
+    Collective schedule vs the oracle's two mean-psums:
+
+        gather(Q_prev)                      # full Q for the P projection
+        P = pmean(G~ Q_prev); orth          # tiny (d1, r) all-reduce
+        Q = psum_scatter(G~^T P) / N        # sharded mean -- the big one
+        gather(Q) for the local decompress  # P Q^T needs full rows
+
+    Same bytes as the oracle's psum pair in steady state, but the factor
+    *state* is sharded (ZeRO-style) and the latency-critical reduction is
+    the scatter half only. The inner GEMMs dispatch with
+    ``shard_map="local"`` (this function already lives inside the
+    caller's shard_map -- per-shard re-dispatch must not recurse).
+    """
+    p_loc = (policy if policy is not None
+             else tsmm.current_policy()).with_(shard_map="local")
+    size = lax.psum(1, axis)
+    q_sharded = (st["q"].shape[0] * size == grad.shape[1])
+    q_prev = (compat.all_gather(st["q"], axis) if q_sharded
+              else st["q"])
+    g = grad.astype(jnp.float32) + st["err"] * cfg.ef_decay
+    p = tsmm.tsmm(g, q_prev, policy=p_loc)                      # TSM2R
+    p = lax.pmean(p, axis)
+    p = _orthonormalize(p)
+    q_local = tsmm.tsmm_t(g, p, policy=p_loc)                   # TSMT
+    if q_sharded:
+        q_new = compat.psum_scatter(q_local, axis) / size       # sharded
+        q_full = compat.all_gather(q_new, axis)
+    else:
+        q_new = q_full = lax.pmean(q_local, axis)
+    approx = p @ q_full.T
+    err = g - approx
+    return approx, dict(st, err=err, q=q_new)
+
+
+def compress_tree_sharded(cfg: PowerSGDConfig, grads, state, *, axis,
+                          policy=None):
+    """``compress_tree`` for shard_map interiors: eligible leaves go
+    through :func:`compress_one_sharded` (sharded Q state), the rest are
+    mean-psum'd dense over ``axis``. Returns (grads, state, metrics);
+    byte accounting counts the scatter+gather pair once (it replaces the
+    oracle's Q psum 1:1)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(state)
+    out_g, out_s = [], []
+    bytes_dense = bytes_sent = 0
+    for g, st in zip(flat_g, flat_s):
+        bytes_dense += g.size * 4
+        if st is None:
+            out_g.append(lax.pmean(g, axis))
+            bytes_sent += g.size * 4
+            out_s.append(None)
+            continue
+        approx, st2 = compress_one_sharded(cfg, g, st, axis=axis,
+                                           policy=policy)
+        bytes_sent += (g.shape[1] * cfg.rank + g.shape[0] * cfg.rank) * 4
+        out_g.append(approx.astype(g.dtype))
+        out_s.append(st2)
+    metrics = {"powersgd_compression": bytes_dense / max(bytes_sent, 1)}
+    return treedef.unflatten(out_g), treedef.unflatten(out_s), metrics
 
 
 def compress_tree(cfg: PowerSGDConfig, grads, state, *, psum=None,

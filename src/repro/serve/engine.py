@@ -14,7 +14,6 @@ host-side (examples/serve_lm.py) -- the device functions are fixed-shape.
 from __future__ import annotations
 
 import contextlib
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,8 @@ from repro.core import tsmm
 from repro.models import model
 
 
-def make_serve_fns(cfg, policy: "tsmm.GemmPolicy | None" = None):
+def make_serve_fns(cfg, policy: "tsmm.GemmPolicy | None" = None, *,
+                   sharded_projections: bool = False):
     """Build (prefill_step, decode_step) pure functions for jit.
 
     ``policy`` pins a GemmPolicy scope around the traced bodies (e.g.
@@ -31,9 +31,22 @@ def make_serve_fns(cfg, policy: "tsmm.GemmPolicy | None" = None):
     hardware). GEMM dispatch is trace-time, so the scope only needs to be
     live while jit traces these functions -- wrapping the bodies here means
     callers don't have to manage the scope around their own ``jax.jit``.
+
+    ``sharded_projections=True`` scopes ``reduce="psum_scatter"`` on top:
+    under a multi-device serving mesh, ``tsmm_t`` products inside the
+    steps (ABFT checksum projections, weight-side custom-VJP paths) come
+    back row-sharded over the DP axes instead of replicated -- the right
+    layout when the consumer immediately re-shards (and a no-op
+    everywhere else: off-mesh or for shapes that cannot scatter, dispatch
+    degrades exactly like the default path). DP axes follow the launch
+    mesh via ``tsmm.derive_dp_axes`` unless the policy pins ``dp_axes``.
     """
     def _scope():
-        return (tsmm.policy(policy) if policy is not None
+        base = policy
+        if sharded_projections:
+            base = ((base if base is not None else tsmm.current_policy())
+                    .with_(reduce="psum_scatter"))
+        return (tsmm.policy(base) if base is not None
                 else contextlib.nullcontext())
 
     def prefill_step(params, batch, cache):
@@ -54,14 +67,17 @@ def sample_token(key, logits, temperature: float = 0.0):
 
 
 def generate(params, cfg, prompts, max_new: int, *, key=None,
-             temperature: float = 0.0, extras=None, policy=None):
+             temperature: float = 0.0, extras=None, policy=None,
+             sharded_projections: bool = False):
     """prompts: (B, S) int32. Returns (B, max_new) generated tokens.
 
     Host loop over jitted single-token steps (the production engine would
     run this under an async scheduler; step functions are identical).
-    ``policy`` threads a GemmPolicy into the jitted steps.
+    ``policy`` threads a GemmPolicy into the jitted steps;
+    ``sharded_projections`` is forwarded to :func:`make_serve_fns`.
     """
-    prefill_step, decode_step = make_serve_fns(cfg, policy=policy)
+    prefill_step, decode_step = make_serve_fns(
+        cfg, policy=policy, sharded_projections=sharded_projections)
     prefill_j = jax.jit(prefill_step)
     decode_j = jax.jit(decode_step)
 

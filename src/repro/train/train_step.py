@@ -7,7 +7,6 @@ lowering (the dry-run compiles exactly this).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -8,10 +8,19 @@ so the four property-test modules collect AND execute. The shim draws
 adversarial than real hypothesis (no shrinking, no example database), but
 the invariants still run on every CI pass. With hypothesis installed
 (requirements-dev.txt), the real package wins untouched.
+
+The fallback is for NETWORK-LESS LOCAL runs only. In CI (the ``CI`` env
+var every major provider sets) the real package is a hard requirement:
+activating the stub there means the install step silently lost
+requirements-dev.txt, so it raises instead of degrading -- for every job
+in the workflow, not just the one that remembers to assert. The explicit
+escape hatch ``REPRO_ALLOW_HYPOTHESIS_FALLBACK=1`` exists for CI-like
+sandboxes that genuinely cannot install packages.
 """
 
 import functools
 import inspect
+import os
 import random
 import sys
 import types
@@ -19,6 +28,15 @@ import types
 try:
     import hypothesis  # noqa: F401  (real package present: do nothing)
 except ModuleNotFoundError:
+    if (os.environ.get("CI")
+            and os.environ.get("REPRO_ALLOW_HYPOTHESIS_FALLBACK") != "1"):
+        raise RuntimeError(
+            "hypothesis is not installed but the CI env var is set: the "
+            "deterministic conftest fallback must never run in CI (it is "
+            "weaker than the real package -- no shrinking, 8 examples). "
+            "Install requirements-dev.txt, or set "
+            "REPRO_ALLOW_HYPOTHESIS_FALLBACK=1 for a sandbox that truly "
+            "cannot.") from None
     _STUB_MAX_EXAMPLES = 8
 
     class _Strategy:

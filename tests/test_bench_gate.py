@@ -1,0 +1,66 @@
+"""benchmarks/check_regression.py: the bench-regression gate logic.
+
+Pure-dict fixtures (no jax); pins the two failure classes the gate exists
+for -- and specifically that the model-gap check uses the log-scale metric
+that can actually fire when the model under-predicts (the report's
+model_error ratio saturates at 1.0 in that direction)."""
+
+import importlib
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+try:
+    gate = importlib.import_module("benchmarks.check_regression")
+finally:
+    sys.path.remove(str(_ROOT))
+
+
+def _report(arm_ok=True, model_us=1.0, measured_us=100.0):
+    observed = ["pallas-tpu"] if arm_ok else ["dense-xla"]
+    return {
+        "dispatch_sanity": [
+            {"arm": "auto", "expected": "pallas-tpu",
+             "observed": observed, "ok": arm_ok},
+        ],
+        "autotune": {"model_error": [
+            {"kind": "tsm2r", "m": 2048, "d1": 512, "d2": 8,
+             "model_error": abs(model_us - measured_us) / measured_us,
+             "model_us": model_us, "measured_us": measured_us},
+        ]},
+    }
+
+
+def test_gate_passes_against_itself():
+    assert gate.check(_report(), _report()) == []
+
+
+def test_gate_catches_dispatch_regression():
+    failures = gate.check(_report(arm_ok=False), _report())
+    assert len(failures) == 1 and "regressed" in failures[0]
+
+
+def test_gate_catches_dropped_arm_and_row():
+    failures = gate.check({"dispatch_sanity": [], "autotune": {}}, _report())
+    assert any("missing" in f for f in failures)
+    assert len(failures) == 2  # arm + model-error row
+
+
+def test_gate_fires_despite_ratio_ceiling():
+    # Both reports have model_error ~0.99 (the ratio's under-prediction
+    # ceiling); only the log gap separates them: ln(100) vs ln(100000).
+    base = _report(model_us=1.0, measured_us=100.0)
+    cur = _report(model_us=1.0, measured_us=100000.0)
+    failures = gate.check(cur, base)
+    assert len(failures) == 1 and "worsened" in failures[0], failures
+    # and the noise floor keeps small drifts quiet: 100 -> 120 us
+    assert gate.check(_report(measured_us=120.0), base) == []
+
+
+def test_gate_new_arm_must_pass_itself():
+    cur = _report()
+    cur["dispatch_sanity"].append(
+        {"arm": "new", "expected": "x", "observed": ["y"], "ok": False})
+    failures = gate.check(cur, _report())
+    assert len(failures) == 1 and "(new) failed" in failures[0]

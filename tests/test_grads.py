@@ -24,7 +24,9 @@ def _rand(key, shape):
 
 
 def _grads(fn, a, b, ct):
-    loss = lambda a_, b_: jnp.sum(fn(a_, b_) * ct)
+    def loss(a_, b_):
+        return jnp.sum(fn(a_, b_) * ct)
+
     return jax.grad(loss, (0, 1))(a, b)
 
 
@@ -118,7 +120,9 @@ def test_finite_difference_directional():
     a, b = _rand(k1, (m, k)), _rand(k2, (k, n))
     da_dir = _rand(k3, (m, k)) / m  # keep the perturbation small
 
-    loss = lambda a_: jnp.sum(jnp.tanh(tsmm.tsmm(a_, b, interpret=True)))
+    def loss(a_):
+        return jnp.sum(jnp.tanh(tsmm.tsmm(a_, b, interpret=True)))
+
     eps = 1e-2
     fd = (loss(a + eps * da_dir) - loss(a - eps * da_dir)) / (2 * eps)
     analytic = jnp.vdot(jax.grad(loss)(a), da_dir)

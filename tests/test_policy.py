@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import perf_model, tsmm
-from repro.kernels import ref
+from repro.kernels import compat, ref
 
 TOL = dict(rtol=1e-3, atol=1e-3)
 
@@ -171,7 +171,9 @@ def test_batched_tsmm_matches_oracle():
 
 def test_batched_tsmm_grad_matches_oracle():
     a, b = _rand(6, (2, 2048, 16)), _rand(7, (16, 8))
-    loss = lambda fn: (lambda a_, b_: jnp.sum(jnp.tanh(fn(a_, b_))))
+    def loss(fn):
+        return lambda a_, b_: jnp.sum(jnp.tanh(fn(a_, b_)))
+
     da, db = jax.grad(loss(lambda a_, b_: tsmm.tsmm(a_, b_, interpret=True)),
                       (0, 1))(a, b)
     ra, rb = jax.grad(loss(lambda a_, b_: jnp.einsum("bmk,kn->bmn", a_, b_)),
@@ -307,3 +309,78 @@ def test_bench_report_shape(tmp_path):
     assert kinds[(20480, 20480, 2)] == "tsm2r"
     assert kinds[(4096, 4096, 1024)] == "dense"
     (tmp_path / "BENCH_test.json").write_text(json.dumps(report))
+
+
+# ---------------------------------------------------------------------------
+# reduce= knob + mesh-derived dp_axes (PR 4)
+# ---------------------------------------------------------------------------
+
+def test_reduce_validation():
+    assert tsmm.GemmPolicy(reduce="psum_scatter").reduce == "psum_scatter"
+    with pytest.raises(ValueError, match="psum_scatter"):
+        tsmm.GemmPolicy(reduce="allreduce")
+
+
+def test_backward_policy_keeps_scatter_downgrades_none():
+    p = tsmm.GemmPolicy(reduce="psum_scatter")
+    assert tsmm.backward_policy(p).reduce == "psum_scatter"
+    assert tsmm.backward_policy(p) is p  # nothing to strip: same object
+    p_none = tsmm.GemmPolicy(reduce="none", mode="tsm2r", executor="interpret")
+    bp = tsmm.backward_policy(p_none)
+    assert bp.reduce == "psum"           # stacked partials can't be a cotangent
+    assert bp.mode == "auto" and bp.executor is None
+
+
+def test_scatter_executor_registered_and_mmt_only():
+    assert "shard_map-scatter" in tsmm.executors()
+    a = jnp.ones((4096, 512), jnp.bfloat16)
+    b = jnp.ones((512, 8), jnp.bfloat16)
+    with tsmm.policy(executor="shard_map-scatter"):
+        with pytest.raises(RuntimeError, match="only applies to tsmm_t"):
+            tsmm.tsmm(a, b)
+
+
+def test_derive_dp_axes_rules():
+    am = compat.abstract_mesh
+    # single non-model-named axis is DP, whatever the name
+    assert tsmm.derive_dp_axes(am((8,), ("anything",))) == ("anything",)
+    # ...but a lone model-named axis is pure TP, never DP
+    assert tsmm.derive_dp_axes(am((8,), ("model",))) == ()
+    assert tsmm.derive_dp_axes(am((8,), ("tp",))) == ()
+    # conventional names win, mesh order preserved
+    assert tsmm.derive_dp_axes(am((2, 4, 2), ("pod", "data", "model"))) \
+        == ("pod", "data")
+    assert tsmm.derive_dp_axes(am((4, 2), ("batch", "model"))) == ("batch",)
+    # no conventional name: everything not model/pipeline-named is DP
+    assert tsmm.derive_dp_axes(am((4, 2), ("nodes", "tensor"))) == ("nodes",)
+    # pure model/pipe mesh: no DP axes at all
+    assert tsmm.derive_dp_axes(am((4, 2), ("model", "pipe"))) == ()
+    # distributed.sharding shares the derivation
+    from repro.distributed import sharding
+    assert sharding.dp_axes(am((2, 2), ("replica", "model"))) == ("replica",)
+
+
+def test_reduce_has_no_effect_off_mesh():
+    a = jnp.ones((4096, 512), jnp.bfloat16)
+    b = jnp.ones((512, 8), jnp.bfloat16)
+    with tsmm.policy(reduce="psum_scatter"):
+        with tsmm.record_dispatches() as log:
+            jax.jit(lambda a_, b_: tsmm.tsmm(a_, b_)).lower(a, b)
+    assert {e.executor for e in log} == {"pallas-tpu"}
+
+
+def test_executor_pin_collective_mismatch_raises():
+    """A pinned shard_map executor must refuse a mismatched reduce= rather
+    than silently changing the output layout the scope asked for."""
+    from jax.sharding import Mesh
+
+    x = jnp.ones((4096, 64), jnp.float32)
+    y = jnp.ones((4096, 8), jnp.float32)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with mesh:
+        with tsmm.policy(executor="shard_map", reduce="psum_scatter"):
+            with pytest.raises(RuntimeError, match="shard_map-scatter"):
+                tsmm.tsmm_t(x, y)
+        with tsmm.policy(executor="shard_map-scatter"):  # default psum
+            with pytest.raises(RuntimeError, match="psum_scatter"):
+                tsmm.tsmm_t(x, y)

@@ -1,10 +1,8 @@
 """Loop-aware HLO cost parser: validated against hand-countable programs."""
 
-import re
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline import analyze
@@ -69,7 +67,6 @@ def test_bytes_scale_with_scan():
 
 
 def test_collective_parse_psum():
-    import os
     # single-device psum lowers away; craft HLO text instead
     hlo = """
 ENTRY %main (p0: f32[128,256]) -> f32[128,256] {

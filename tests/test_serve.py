@@ -48,3 +48,37 @@ def test_sample_token_greedy_vs_temperature():
     # near-zero temperature sampling concentrates on the argmax
     tok2 = engine.sample_token(jax.random.PRNGKey(0), logits, temperature=0.01)
     assert int(tok2[0]) == 1
+
+
+def test_sharded_projections_flag_matches_default_off_mesh():
+    """sharded_projections scopes reduce="psum_scatter" around the serve
+    steps; off-mesh the knob changes nothing, so outputs must be identical
+    (the >=2-device layout behavior is pinned in the scatter subprocess
+    tests)."""
+    from repro.core import tsmm
+
+    cfg = registry.get_config("llama3.2-3b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                 cfg.vocab_size)
+    base = engine.generate(params, cfg, prompts, max_new=4)
+    sharded = engine.generate(params, cfg, prompts, max_new=4,
+                              sharded_projections=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(sharded))
+
+    # the scope really is applied while the step body runs (trace time)
+    prefill, _ = engine.make_serve_fns(cfg, sharded_projections=True)
+    seen = {}
+    real_prefill = model.prefill
+    def spy_prefill(params_, cfg_, batch_, cache_):
+        seen["reduce"] = tsmm.current_policy().reduce
+        return real_prefill(params_, cfg_, batch_, cache_)
+    engine.model.prefill = spy_prefill
+    try:
+        cache = model.init_cache(cfg, 1, 12)
+        jax.eval_shape(prefill, params, {"tokens": prompts}, cache)
+    finally:
+        engine.model.prefill = real_prefill
+    assert seen["reduce"] == "psum_scatter"
+    # and no leakage outside the step: scope is per-call, not process state
+    assert tsmm.current_policy().reduce == "psum"

@@ -15,7 +15,6 @@ import re
 import subprocess
 import sys
 
-import pytest
 
 _ROOT = pathlib.Path(__file__).resolve().parents[1]
 

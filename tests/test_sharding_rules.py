@@ -7,7 +7,6 @@ jax.sharding.AbstractMesh (no real devices needed for spec logic)."""
 
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import registry
