@@ -36,17 +36,32 @@ def run():
             ("auto", tsmm.GemmPolicy(), {"pallas-tpu"}),
             ("interpret", tsmm.GemmPolicy(interpret=True), {"interpret"}),
         ]
+        if kind in ("tsm2r", "tsmt"):
+            # Split-reduction A/B: the split-K kernel + tree-reduce
+            # epilogue vs the sequential kernel the scope pins. tsm2l has
+            # no reduction grid axis, hence no split arm.
+            arms += [
+                ("split4", tsmm.GemmPolicy(split=4), {"pallas-tpu"}),
+                ("sequential", tsmm.GemmPolicy(split="never"),
+                 {"pallas-tpu"}),
+            ]
         times = {}
         for arm, pol, expect in arms:
             us, log = timeit_arm(fn, *args, policy=pol,
                                  expect_executors=expect, reps=3, warmup=1)
             times[arm] = us
             kinds = sorted({e.kind for e in log})
+            splits = sorted({str(e.split) for e in log})
             rows.append((f"ab_{kind}_m{m}_{arm}", round(us, 1),
                          f"executors={'+'.join(sorted({e.executor for e in log}))};"
-                         f"kinds={'+'.join(kinds)};dispatch_ok=1"))
+                         f"kinds={'+'.join(kinds)};split={'+'.join(splits)};"
+                         f"dispatch_ok=1"))
         rows.append((f"ab_{kind}_m{m}_ratio", 0,
                      f"dense_over_auto={times['dense'] / times['auto']:.3f}"))
+        if "split4" in times:
+            rows.append((f"ab_{kind}_m{m}_split_ratio", 0,
+                         f"sequential_over_split4="
+                         f"{times['sequential'] / times['split4']:.3f}"))
     return emit(rows)
 
 

@@ -28,7 +28,7 @@ def run():
                  f"speedup_vs_v0={t0 / t1:.2f}"))
     rows.append(("ablation_xla_dot_cpu", round(t_dot, 1),
                  f"speedup_vs_v0={t0 / t_dot:.2f}"))
-    bm, bk = perf_model.choose_params_tsm2r(m, k, n)
+    bm, bk, _ = perf_model.choose_params_tsm2r(m, k, n)
     spec = perf_model.V5E
     bpe = perf_model.bytes_per_elem(jnp.bfloat16)
     gm, gk = m // bm, -(-k // bk)

@@ -7,7 +7,12 @@ timing the wrong thing):
 
 * ``psum``          -- the replicated-output default (``shard_map``),
 * ``psum_scatter``  -- the sharded-output executor (``shard_map-scatter``),
-* ``dense``         -- stock XLA under GSPMD, the no-kernel control.
+* ``dense``         -- stock XLA under GSPMD, the no-kernel control,
+* ``psum_split``    -- psum with per-shard split reduction (``split=2``):
+  split partials are summed inside each shard's kernel epilogue, so the
+  executor pair and the collective contract must match the plain psum arm
+  exactly -- this arm exists to catch a split path leaking partials across
+  the shard boundary.
 
 On this CPU container the per-shard kernels run in interpret mode, so the
 absolute times exercise the mechanism only (see benchmarks/common.py's
@@ -63,6 +68,7 @@ def run():
     psum_pol = tsmm.GemmPolicy(reduce="psum")
     scatter_pol = tsmm.GemmPolicy(reduce="psum_scatter")
     dense_pol = tsmm.GemmPolicy(mode="dense")
+    split_pol = tsmm.GemmPolicy(reduce="psum", split=2)
     for shard_m, a_dim, b_dim in SHAPES:
         m = shard_m * len(devs)
         x, y = rand(0, (m, a_dim)), rand(1, (m, b_dim))
@@ -76,12 +82,18 @@ def run():
             us_d, _ = timeit_arm(
                 _mmt, x, y, policy=dense_pol, expect_executors=EXPECT_DENSE
             )
+            us_k, split_log = timeit_arm(
+                _mmt, x, y, policy=split_pol, expect_executors=EXPECT_PSUM
+            )
+        assert {e.split for e in split_log} == {2}, split_log
         tag = f"m{m}_a{a_dim}_b{b_dim}"
         note_p = f"replicated out, {len(devs)} shards"
         note_s = f"sharded out; psum/scatter={us_p / us_s:.2f}"
+        note_k = f"per-shard split=2; psum/psum_split={us_p / us_k:.2f}"
         rows.append((f"tsmmt_psum_{tag}", f"{us_p:.1f}", note_p))
         rows.append((f"tsmmt_psum_scatter_{tag}", f"{us_s:.1f}", note_s))
         rows.append((f"tsmmt_dense_{tag}", f"{us_d:.1f}", "dense-xla control"))
+        rows.append((f"tsmmt_psum_split_{tag}", f"{us_k:.1f}", note_k))
     return emit(rows)
 
 

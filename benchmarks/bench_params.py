@@ -30,9 +30,10 @@ def run():
         kind = tsmm.classify_gemm(m, k, n, pol)
         bound = perf_model.classify(m, k, n, pol.spec)
         if kind == "tsm2r":
-            bm, bk = perf_model.choose_params_tsm2r(m, k, n, pol.spec)
+            bm, bk, s = perf_model.choose_params_tsm2r(m, k, n, pol.spec)
             vmem = perf_model.tsm2r_vmem_usage(bm, bk, n, jnp.bfloat16)
-            det = f"bound={bound};bm={bm};bk={bk};vmem_kb={vmem//1024}"
+            det = (f"bound={bound};bm={bm};bk={bk};splits={s};"
+                   f"vmem_kb={vmem//1024}")
         elif kind == "tsm2l":
             bm = perf_model.choose_params_tsm2l(m, k, n, pol.spec)
             det = f"bound={bound};bm={bm}"

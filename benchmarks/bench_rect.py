@@ -12,9 +12,10 @@ def run():
     m, n = 15360, 16
     for div in (1, 2, 4, 8):
         k = m // div
-        bm, bk = perf_model.choose_params_tsm2r(m, k, n)
-        t = perf_model.tsm2r_model_time(m, k, n, bm, bk)
-        util = perf_model.modeled_bandwidth_utilization(m, k, n, bm, bk)
+        bm, bk, s = perf_model.choose_params_tsm2r(m, k, n)
+        t = perf_model.tsm2r_model_time(m, k, n, bm, bk, splits=s)
+        util = perf_model.modeled_bandwidth_utilization(m, k, n, bm, bk,
+                                                        splits=s)
         rows.append((f"tsm2r_rect_m{m}_k{k}", round(t * 1e6, 1),
                      f"bw_util={util:.3f}"))
     return emit(rows)

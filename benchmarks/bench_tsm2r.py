@@ -46,15 +46,18 @@ def run():
                          f"v0={t_v0:.0f}us;v1={t_v1:.0f}us"))
     for m, k in CPU_SHAPES + PAPER_SHAPES:
         for n in NS:
-            bm, bk = perf_model.choose_params_tsm2r(m, k, n)
-            t_model = perf_model.tsm2r_model_time(m, k, n, bm, bk)
-            util = perf_model.modeled_bandwidth_utilization(m, k, n, bm, bk)
-            cutil = perf_model.modeled_compute_utilization(m, k, n, bm, bk)
+            bm, bk, s = perf_model.choose_params_tsm2r(m, k, n)
+            t_model = perf_model.tsm2r_model_time(m, k, n, bm, bk, splits=s)
+            util = perf_model.modeled_bandwidth_utilization(m, k, n, bm, bk,
+                                                            splits=s)
+            cutil = perf_model.modeled_compute_utilization(m, k, n, bm, bk,
+                                                           splits=s)
             t_base = xla_baseline_model_time(m, k, n)
             rows.append((
                 f"tsm2r_v5e_m{m}_n{n}", round(t_model * 1e6, 1),
                 f"bw_util={util:.3f};comp_util={cutil:.4f};"
-                f"speedup_vs_generic={t_base / t_model:.2f};bm={bm};bk={bk}"))
+                f"speedup_vs_generic={t_base / t_model:.2f};bm={bm};bk={bk};"
+                f"splits={s}"))
     return emit(rows)
 
 

@@ -4,6 +4,12 @@ committed baseline.
     PYTHONPATH=src python -m benchmarks.check_regression \
         --baseline benchmarks/BENCH_baseline.json BENCH_<rev>.json
 
+``--update-baseline`` rewrites the baseline file from the current report
+instead of gating against it (refuses when the current report itself has
+failing dispatch-sanity arms -- a broken run must not become the bar).
+Use it after intentionally changing the arm set or the model, and commit
+the diff.
+
 Two classes of regression fail the gate (exit 1):
 
 * dispatch sanity -- every policy arm that hit its intended executor in
@@ -129,10 +135,36 @@ def main(argv=None):
         default=0.25,
         help="absolute log-gap slack in nats (noise floor for CI runners)",
     )
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the baseline file from the current report "
+        "(refused when the current report has failing sanity arms)",
+    )
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
         current = json.load(f)
+
+    if args.update_baseline:
+        bad = [a for a, row in _sanity_index(current).items() if not row.get("ok")]
+        if bad:
+            print(
+                "refusing --update-baseline: current report has failing "
+                f"dispatch_sanity arms: {sorted(bad)}"
+            )
+            sys.exit(1)
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=2)
+            f.write("\n")
+        n_arms = len(_sanity_index(current))
+        n_rows = len(_model_error_index(current))
+        print(
+            f"baseline updated: {args.baseline} <- {args.current} "
+            f"({n_arms} dispatch arms, {n_rows} model-error rows)"
+        )
+        return
+
     with open(args.baseline) as f:
         baseline = json.load(f)
 

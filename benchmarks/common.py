@@ -58,9 +58,18 @@ def dispatch_sanity(m: int = 4096, k: int = 512, n: int = 8):
     CI can fail on silent dispatch regressions (benchmarks/
     check_regression.py gates on these rows vs the committed baseline).
 
-    On a >1-device backend two mesh arms join: ``tsmm_t`` under a DP mesh
+    Split-reduction arms: ``tsmm_t`` under ``split=4`` vs ``split="never"``
+    must both stay on the kernel executor AND the dispatch events must
+    carry the scope's split knob (``DispatchEvent.split``) -- a policy that
+    silently stops threading the knob fails the arm even though the
+    executor looks right.
+
+    On a >1-device backend mesh arms join: ``tsmm_t`` under a DP mesh
     must land on ``shard_map`` (reduce="psum", replicated output) and on
-    ``shard_map-scatter`` (reduce="psum_scatter", sharded output)."""
+    ``shard_map-scatter`` (reduce="psum_scatter", sharded output); the
+    ``mesh_psum_split`` arm asserts that a split scope does not disturb
+    the collective contract (same executors, split knob on every event
+    down to the per-shard re-dispatch)."""
     a, b = rand(0, (m, k)), rand(1, (k, n))
     arms = [
         ("dense", tsmm.GemmPolicy(mode="dense"), "dense-xla"),
@@ -74,6 +83,22 @@ def dispatch_sanity(m: int = 4096, k: int = 512, n: int = 8):
         observed = sorted({e.executor for e in log})
         out.append({"arm": name, "shape": [m, k, n], "expected": expect,
                     "observed": observed, "ok": observed == [expect]})
+    # Split-vs-sequential arms on the headline TSMT (PowerSGD/ABFT) shape.
+    x_t, y_t = rand(4, (m, 64)), rand(5, (m, n))
+    split_arms = [
+        ("tsmt_split4", tsmm.GemmPolicy(split=4), 4),
+        ("tsmt_sequential", tsmm.GemmPolicy(split="never"), "never"),
+    ]
+    for name, pol, knob in split_arms:
+        _, log = jit_isolated(lambda x_, y_: tsmm.tsmm_t(x_, y_), x_t, y_t,
+                              policy=pol)
+        observed = sorted({e.executor for e in log})
+        splits_seen = sorted({str(e.split) for e in log})
+        out.append({"arm": name, "shape": [m, 64, n],
+                    "expected": "pallas-tpu", "observed": observed,
+                    "split": splits_seen,
+                    "ok": (observed == ["pallas-tpu"]
+                           and splits_seen == [str(knob)])})
     devs = jax.devices()
     # The mesh arms need a per-shard shape that still classifies tsmt and
     # a scatter dim that divides the shard count: scale the tall dim with
@@ -86,22 +111,30 @@ def dispatch_sanity(m: int = 4096, k: int = 512, n: int = 8):
         m_mesh = 2048 * len(devs)
         x, y = rand(2, (m_mesh, 64)), rand(3, (m_mesh, n))
         mesh_arms = [
-            ("mesh_psum", tsmm.GemmPolicy(reduce="psum"), "shard_map"),
+            ("mesh_psum", tsmm.GemmPolicy(reduce="psum"), "shard_map",
+             "auto"),
             ("mesh_psum_scatter", tsmm.GemmPolicy(reduce="psum_scatter"),
-             "shard_map-scatter"),
+             "shard_map-scatter", "auto"),
+            # Split partials must not change the psum contract: same
+            # executor pair, the split knob visible on every event.
+            ("mesh_psum_split", tsmm.GemmPolicy(reduce="psum", split=2),
+             "shard_map", 2),
         ]
-        for name, pol, expect in mesh_arms:
+        for name, pol, expect, knob in mesh_arms:
             with mesh:
                 _, log = jit_isolated(lambda x_, y_: tsmm.tsmm_t(x_, y_),
                                       x, y, policy=pol)
             observed = sorted({e.executor for e in log})
+            splits_seen = sorted({str(e.split) for e in log})
             # Exact set, like the base arms: the outer executor plus the
             # per-shard kernel re-dispatch and NOTHING else -- an extra
             # dense-xla sneaking into the trace is a dispatch regression.
             expected = sorted({expect, "pallas-tpu"})
             out.append({"arm": name, "shape": [m_mesh, 64, n],
                         "expected": expected, "observed": observed,
-                        "ok": observed == expected})
+                        "split": splits_seen,
+                        "ok": (observed == expected
+                               and splits_seen == [str(knob)])})
     return out
 
 

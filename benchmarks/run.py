@@ -142,6 +142,7 @@ def build_report(section_results, autotune=None, dispatch_sanity=None):
             "interpret": pol.interpret,
             "shard_map": pol.shard_map,
             "reduce": pol.reduce,
+            "split": pol.split,
             "dp_axes": list(pol.dp_axes) if pol.dp_axes else None,
             "tuning_table_records": len(tbl.records) if tbl is not None else 0,
         },

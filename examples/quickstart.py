@@ -69,10 +69,11 @@ print(f"dispatch spy: {log[0].kind} via {log[0].executor} "
       f"for shape {log[0].shape}")
 
 # --- The performance model that drives block choice -------------------------
-bm, bk = perf_model.choose_params_tsm2r(20480, 20480, 16)
-print(f"v5e params for 20480^2 x n=16: block_m={bm} block_k={bk}, "
+bm, bk, splits = perf_model.choose_params_tsm2r(20480, 20480, 16)
+print(f"v5e params for 20480^2 x n=16: block_m={bm} block_k={bk} "
+      f"splits={splits}, "
       f"modeled bw util="
-      f"{perf_model.modeled_bandwidth_utilization(20480, 20480, 16, bm, bk):.1%}")
+      f"{perf_model.modeled_bandwidth_utilization(20480, 20480, 16, bm, bk, splits=splits):.1%}")
 print(f"t2_threshold(v5e, bf16) = {perf_model.t2_threshold():.0f} "
       "(paper: all n<=32 cases sit below it => memory-bound)")
 print("OK")

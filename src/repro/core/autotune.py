@@ -55,11 +55,13 @@ __all__ = [
     "TABLE_SCHEMA",
     "TuningRecord",
     "TuningTable",
+    "SpecFit",
     "Observation",
     "CalibrationResult",
     "bucket_dim",
     "bucket_shape",
     "record_key",
+    "fit_key",
     "jit_isolated",
     "time_call",
     "autotune_shape",
@@ -69,7 +71,12 @@ __all__ = [
     "calibrate",
 ]
 
-TABLE_SCHEMA = "repro-tsm2x-tuning/1"
+# /2 added the split-reduction dimension ("splits" in record params) and
+# the per-bucket "fits" block. Loaders accept every "repro-tsm2x-tuning/"
+# schema: /1 records simply lack both (consumers default splits to 1 --
+# the sequential kernel those tables actually measured -- and fitted_spec
+# falls through to the caller's spec).
+TABLE_SCHEMA = "repro-tsm2x-tuning/2"
 
 KINDS = ("tsm2r", "tsm2l", "tsmt")
 
@@ -94,6 +101,18 @@ def record_key(kind: str, bucket: tuple[int, int, int], dtype: str,
     """Stable string form of the table key (also the on-disk JSON key)."""
     bm, b1, b2 = bucket
     return f"{kind}|{bm}x{b1}x{b2}|{dtype}|{spec_name}|{executor}"
+
+
+# Wildcard cell for the table-wide (global) calibration fit.
+GLOBAL_FIT = ("*", (0, 0, 0), "*")
+
+
+def fit_key(kind: str, bucket: tuple[int, int, int], dtype: str,
+            spec_name: str) -> str:
+    """Key of one fitted-constants cell (no executor: the fit corrects the
+    *model*, which is executor-blind)."""
+    bm, b1, b2 = bucket
+    return f"{kind}|{bm}x{b1}x{b2}|{dtype}|{spec_name}"
 
 
 def _dtype_name(dtype) -> str:
@@ -142,30 +161,76 @@ class TuningRecord:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpecFit:
+    """Fitted model constants for one shape bucket (or the table-wide
+    ``GLOBAL_FIT`` wildcard cell): the ``calibrate()`` output, stored so
+    ``GemmPolicy.tuning_table`` consumers can run the analytic chooser
+    under the constants measured NEAR the shape at hand instead of one
+    global compromise (step overhead and DMA latency are strongly
+    shape-regime-dependent -- a latency-bound tsm2l bucket and a streaming
+    tsm2r bucket want very different corrections)."""
+
+    kind: str                       # kernel kind, or "*" for the global fit
+    bucket: tuple[int, int, int]    # bucketed shape; (0, 0, 0) for global
+    dtype: str                      # jnp dtype name, or "*" for global
+    spec_name: str                  # TPUSpec.name the fit corrects
+    step_overhead: float
+    dma_latency: float
+    # vmem_usable raised by fit_spec when a measured winner would not fit
+    # the modeled budget -- without carrying it, the table-driven analytic
+    # fallback would re-prune configs calibration proved feasible. None on
+    # fits saved before the field existed: leave the caller's budget alone.
+    vmem_usable: float | None = None
+
+    @property
+    def key(self) -> str:
+        return fit_key(self.kind, self.bucket, self.dtype, self.spec_name)
+
+
+@dataclasses.dataclass(frozen=True)
 class TuningTable:
-    """Immutable, hashable set of tuning records.
+    """Immutable, hashable set of tuning records (+ fitted model specs).
 
     Hashability matters: the table rides on ``GemmPolicy.tuning_table``,
     and policies flow through the kernels' ``custom_vjp`` nondiff args.
     ``add`` returns a new table (same-key records are replaced).
+
+    ``fits`` carries per-bucket fitted model constants plus the global
+    fit (``calibrate`` writes them); :meth:`fitted_spec` is the consumer
+    view -- bucket-local fit first, global fit second, caller's spec as-is
+    when the table has neither (v1 tables).
     """
 
     records: tuple[TuningRecord, ...] = ()
+    fits: tuple[SpecFit, ...] = ()
     _index: dict | None = dataclasses.field(
+        default=None, compare=False, repr=False)
+    _fit_index: dict | None = dataclasses.field(
         default=None, compare=False, repr=False)
 
     def __post_init__(self):
         object.__setattr__(self, "_index", {r.key: r for r in self.records})
+        object.__setattr__(self, "_fit_index",
+                           {f.key: f for f in self.fits})
 
     @classmethod
-    def from_records(cls, records: Iterable[TuningRecord]) -> "TuningTable":
+    def from_records(cls, records: Iterable[TuningRecord],
+                     fits: Iterable[SpecFit] = ()) -> "TuningTable":
         merged: dict[str, TuningRecord] = {}
         for r in records:
             merged[r.key] = r
-        return cls(records=tuple(merged.values()))
+        fmerged: dict[str, SpecFit] = {}
+        for f in fits:
+            fmerged[f.key] = f
+        return cls(records=tuple(merged.values()),
+                   fits=tuple(fmerged.values()))
 
     def add(self, record: TuningRecord) -> "TuningTable":
-        return self.from_records((*self.records, record))
+        return self.from_records((*self.records, record), self.fits)
+
+    def with_fits(self, fits: Iterable[SpecFit]) -> "TuningTable":
+        """New table with ``fits`` merged over the existing ones."""
+        return self.from_records(self.records, (*self.fits, *fits))
 
     def lookup(self, kind: str, m: int, d1: int, d2: int, *, dtype,
                spec: str, executor: str) -> TuningRecord | None:
@@ -173,11 +238,43 @@ class TuningTable:
                          spec, executor)
         return self._index.get(key)
 
+    def fitted_spec(self, kind: str, m: int, d1: int, d2: int, *, dtype,
+                    spec):
+        """``spec`` with this shape-bucket's fitted constants applied --
+        bucket-local cell first, the global wildcard second, unchanged
+        when the table carries no fits at all."""
+        fit = self._fit_index.get(
+            fit_key(kind, bucket_shape(m, d1, d2), _dtype_name(dtype),
+                    spec.name))
+        if fit is None:
+            fit = self._fit_index.get(fit_key(*GLOBAL_FIT, spec.name))
+        if fit is None:
+            return spec
+        repl = {"step_overhead": fit.step_overhead,
+                "dma_latency": fit.dma_latency}
+        if fit.vmem_usable is not None:
+            # the budget only ever widens: calibration proved configs past
+            # the caller's budget feasible, never the reverse.
+            repl["vmem_usable"] = max(fit.vmem_usable, spec.vmem_usable)
+        return dataclasses.replace(spec, **repl)
+
     # -- JSON round trip ----------------------------------------------------
 
     def to_json(self) -> dict:
         return {
             "schema": TABLE_SCHEMA,
+            "fits": [
+                {
+                    "kind": f.kind,
+                    "bucket": list(f.bucket),
+                    "dtype": f.dtype,
+                    "spec": f.spec_name,
+                    "step_overhead": f.step_overhead,
+                    "dma_latency": f.dma_latency,
+                    "vmem_usable": f.vmem_usable,
+                }
+                for f in self.fits
+            ],
             "records": [
                 {
                     "key": r.key,
@@ -203,7 +300,18 @@ class TuningTable:
         schema = data.get("schema", "")
         if not schema.startswith("repro-tsm2x-tuning/"):
             raise ValueError(f"not a tuning table (schema={schema!r})")
-        return cls.from_records(
+        fits = tuple(
+            SpecFit(
+                kind=f["kind"],
+                bucket=tuple(f["bucket"]),
+                dtype=f["dtype"],
+                spec_name=f["spec"],
+                step_overhead=f["step_overhead"],
+                dma_latency=f["dma_latency"],
+                vmem_usable=f.get("vmem_usable"),  # absent pre-field
+            )
+            for f in data.get("fits", ()))  # absent in /1 tables
+        return cls.from_records((
             TuningRecord(
                 kind=d["kind"],
                 bucket=tuple(d["bucket"]),
@@ -218,7 +326,7 @@ class TuningTable:
                 model_pick=_params_tuple(d["model_pick"]),
                 model_pick_measured_us=d["model_pick_measured_us"],
             )
-            for d in data["records"])
+            for d in data["records"]), fits)
 
     def save(self, path) -> None:
         with open(path, "w") as f:
@@ -299,16 +407,17 @@ def _kind_plan(kind: str, m: int, d1: int, d2: int, spec, dtype,
         explored = dataclasses.replace(
             spec, vmem_usable=min(spec.vmem_usable * explore_vmem, 1.0))
     if kind == "tsm2r":
-        cands = [{"block_m": bm, "block_k": bk}
-                 for bm, bk in perf_model.tsm2r_candidates(m, d1, d2,
-                                                          explored, dtype)]
+        cands = [{"block_m": bm, "block_k": bk, "splits": s}
+                 for bm, bk, s in perf_model.tsm2r_candidates(m, d1, d2,
+                                                             explored, dtype)]
 
         def model(p):
             return perf_model.tsm2r_model_time(
-                m, d1, d2, p["block_m"], p["block_k"], spec, dtype)
+                m, d1, d2, p["block_m"], p["block_k"], spec, dtype,
+                splits=p.get("splits", 1))
 
-        bm, bk = perf_model.choose_params_tsm2r(m, d1, d2, spec, dtype)
-        pick = {"block_m": bm, "block_k": bk}
+        bm, bk, s = perf_model.choose_params_tsm2r(m, d1, d2, spec, dtype)
+        pick = {"block_m": bm, "block_k": bk, "splits": s}
     elif kind == "tsm2l":
         cands = [{"block_m": bm}
                  for bm in perf_model.tsm2l_candidates(m, d1, d2,
@@ -320,16 +429,17 @@ def _kind_plan(kind: str, m: int, d1: int, d2: int, spec, dtype,
 
         pick = {"block_m": perf_model.choose_params_tsm2l(m, d1, d2, spec, dtype)}
     elif kind == "tsmt":
-        cands = [{"block_m": bm, "block_a": ba}
-                 for bm, ba in perf_model.tsmt_candidates(m, d1, d2,
-                                                         explored, dtype)]
+        cands = [{"block_m": bm, "block_a": ba, "splits": s}
+                 for bm, ba, s in perf_model.tsmt_candidates(m, d1, d2,
+                                                            explored, dtype)]
 
         def model(p):
             return perf_model.tsmt_model_time(
-                m, d1, d2, p["block_m"], p["block_a"], spec, dtype)
+                m, d1, d2, p["block_m"], p["block_a"], spec, dtype,
+                splits=p.get("splits", 1))
 
-        bm, ba = perf_model.choose_params_tsmt(m, d1, d2, spec, dtype)
-        pick = {"block_m": bm, "block_a": ba}
+        bm, ba, s = perf_model.choose_params_tsmt(m, d1, d2, spec, dtype)
+        pick = {"block_m": bm, "block_a": ba, "splits": s}
     else:
         raise ValueError(f"unknown kernel kind {kind!r}: valid kinds are "
                          f"{', '.join(KINDS)}")
@@ -461,13 +571,13 @@ class Observation:
         if self.kind == "tsm2r":
             return perf_model.tsm2r_model_time(
                 self.m, self.d1, self.d2, p["block_m"], p["block_k"],
-                spec, self.dtype)
+                spec, self.dtype, splits=p.get("splits", 1))
         if self.kind == "tsm2l":
             return perf_model.tsm2l_model_time(
                 self.m, self.d1, self.d2, p["block_m"], spec, self.dtype)
         return perf_model.tsmt_model_time(
             self.m, self.d1, self.d2, p["block_m"], p["block_a"],
-            spec, self.dtype)
+            spec, self.dtype, splits=p.get("splits", 1))
 
     def vmem_bytes(self) -> int:
         p = dict(self.params)
@@ -569,9 +679,13 @@ def calibrate(shapes=DEFAULT_CALIBRATION_SHAPES, *, spec=None,
 
     Autotunes ``shapes`` under ``policy`` (or the current scope), then fits
     the free constants of ``spec`` (default: the policy's spec) to the
-    measurements. Returns the fitted spec, before/after error, and the
-    table -- hang the table on a policy and/or build a new policy around
-    ``result.spec`` to use both halves.
+    measurements -- once globally over every observation, and once per
+    shape bucket. Both land on the returned table
+    (``TuningTable.fits``), so consumers hanging the table on
+    ``GemmPolicy.tuning_table`` get bucket-local model constants for
+    off-table shapes in a measured bucket (``kernels/ops`` prefers the
+    bucket-local fit; the global fit is the fallback cell). Returns the
+    globally fitted spec, before/after error, and the table.
     """
     from repro.core import tsmm
 
@@ -580,5 +694,19 @@ def calibrate(shapes=DEFAULT_CALIBRATION_SHAPES, *, spec=None,
         pol = pol.with_(spec=spec)
     table = build_table(shapes, dtype=dtype, policy=pol, reps=reps,
                         warmup=warmup, explore_vmem=explore_vmem)
-    fitted = fit_spec(pol.spec, observations_from_table(table))
-    return dataclasses.replace(fitted, table=table)
+    obs = observations_from_table(table)
+    fitted = fit_spec(pol.spec, obs)
+    fits = [SpecFit(*GLOBAL_FIT, pol.spec.name,
+                    fitted.spec.step_overhead, fitted.spec.dma_latency,
+                    fitted.spec.vmem_usable)]
+    groups: dict[tuple, list[Observation]] = {}
+    for o in obs:
+        key = (o.kind, bucket_shape(o.m, o.d1, o.d2), _dtype_name(o.dtype))
+        groups.setdefault(key, []).append(o)
+    for (kind, bucket, dt), group in groups.items():
+        local = fit_spec(pol.spec, group)
+        fits.append(SpecFit(kind, bucket, dt, pol.spec.name,
+                            local.spec.step_overhead,
+                            local.spec.dma_latency,
+                            local.spec.vmem_usable))
+    return dataclasses.replace(fitted, table=table.with_fits(fits))

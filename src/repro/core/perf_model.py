@@ -54,6 +54,13 @@ class TPUSpec:
     # MXU native tile (systolic array is 128x128; sublane granularity 8).
     lane: int = 128
     sublane: int = 8
+    # Independent compute cores the grid's PARALLEL cells can occupy.
+    # The peak_flops/hbm_bw numbers above are whole-chip: a grid whose
+    # parallel dimensions collapse below n_cores leaves cores idle and
+    # only reaches a cores_busy/n_cores fraction of both peaks (each core
+    # owns its slice of the HBM ports). v5e has a single TensorCore;
+    # v5p is a megacore (2 TensorCores behind one grid).
+    n_cores: int = 1
 
     def peak_flops(self, dtype) -> float:
         return self.peak_flops_bf16 if jnp.dtype(dtype).itemsize <= 2 else self.peak_flops_f32
@@ -71,6 +78,7 @@ V5P = TPUSpec(
     peak_flops_f32=459e12 / 4,
     hbm_bw=2765e9,
     ici_bw_per_link=100e9,
+    n_cores=2,  # megacore: Mosaic splits parallel grid dims across 2 cores
 )
 
 SPECS: dict[str, TPUSpec] = {
@@ -138,6 +146,29 @@ def _roundup(x: int, q: int) -> int:
     return ((x + q - 1) // q) * q
 
 
+def occupancy(parallel_cells: int, spec: TPUSpec = V5E) -> float:
+    """Fraction of the chip's cores the grid's parallel cells can keep busy.
+
+    ``min(n_cores, cells) / n_cores``: the TPU analogue of the paper's
+    occupancy term (Section 3.1.9 -- warps resident per SM). Sequential
+    ("arbitrary") grid dims contribute nothing; a kernel whose parallel
+    dims collapse to one cell runs on one core of an n_cores chip and sees
+    1/n_cores of both compute and HBM peaks. This is the term that makes
+    split-reduction worth anything: splitting the reduction multiplies
+    ``parallel_cells`` by S at the cost of the partials round trip.
+    """
+    return min(spec.n_cores, max(parallel_cells, 1)) / spec.n_cores
+
+
+def split_partials_bytes(splits: int, rows: int, cols: int) -> int:
+    """Extra HBM traffic of an S-way split reduction: the (S, rows, cols)
+    f32 partials are written once and read once by the tree-reduce
+    epilogue (S=1 writes the output directly: zero extra traffic)."""
+    if splits <= 1:
+        return 0
+    return 2 * splits * rows * _roundup(cols, 128) * 4
+
+
 def tsm2r_vmem_usage(bm: int, bk: int, n: int, dtype) -> int:
     """VMEM bytes for one grid cell, double-buffered in-streams + acc + out."""
     b = bytes_per_elem(dtype)
@@ -150,7 +181,8 @@ def tsm2r_vmem_usage(bm: int, bk: int, n: int, dtype) -> int:
 
 
 def tsm2r_model_time(m: int, k: int, n: int, bm: int, bk: int,
-                     spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> float:
+                     spec: TPUSpec = V5E, dtype=jnp.bfloat16, *,
+                     splits: int = 1) -> float:
     """Modeled wall time of the TSM2R kernel on ``spec``.
 
     Memory term: A moves once; B's (bk, n) window is re-fetched once per
@@ -158,17 +190,26 @@ def tsm2r_model_time(m: int, k: int, n: int, bm: int, bk: int,
     once. Compute term: MXU time at n/lane utilization (skinny n wastes MXU
     columns -- irrelevant while memory-bound, harmful past the threshold).
     Latency term: pipeline prologue + per-step overhead; deep grids amortize.
+
+    ``splits`` > 1 models the split-reduction variant: the k sweep is cut
+    into S independent parallel slices (grid parallel cells x S, occupancy
+    up on multi-core chips) at the cost of the (S, m, n) f32 partials
+    round trip (``split_partials_bytes``) -- the TSM paper's leap-based
+    global-reduce trade, discretized.
     """
     b = bytes_per_elem(dtype)
-    gm, gk = math.ceil(m / bm), math.ceil(k / bk)
-    steps = gm * gk
+    gm, gk = math.ceil(m / bm), math.ceil(k / (splits * bk))
+    steps = gm * gk * splits
     a_bytes = m * k * b
     b_bytes = k * _roundup(n, 128) * b * gm     # refetched per m-block
     c_bytes = m * _roundup(n, 128) * b
-    t_mem = (a_bytes + b_bytes + c_bytes) / spec.hbm_bw
+    c_bytes += split_partials_bytes(splits, m, n)
+    occ = occupancy(gm * splits, spec)
+    t_mem = (a_bytes + b_bytes + c_bytes) / (spec.hbm_bw * occ)
     # MXU: (bm, bk) x (bk, n) per step; effective peak scales with n/lane.
     mxu_eff = min(n, spec.lane) / spec.lane
-    t_comp = 2.0 * m * k * max(n, 1) / (spec.peak_flops(dtype) * max(mxu_eff, 1e-3))
+    t_comp = 2.0 * m * k * max(n, 1) / (
+        spec.peak_flops(dtype) * max(mxu_eff, 1e-3) * occ)
     t_lat = spec.dma_latency + steps * spec.step_overhead
     return max(t_mem, t_comp) + t_lat
 
@@ -211,15 +252,27 @@ def tsm2l_model_time(m: int, k: int, n: int, bm: int,
 
 
 def tsmt_model_time(m: int, a: int, bdim: int, bm: int, ba: int,
-                    spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> float:
+                    spec: TPUSpec = V5E, dtype=jnp.bfloat16, *,
+                    splits: int = 1) -> float:
+    """Modeled TSMT wall time; ``splits`` models the split-reduction
+    variant (the m sweep cut into S parallel slices emitting (S, a, bdim)
+    f32 partials). This is THE occupancy-starved kernel of the framework:
+    with PowerSGD/ABFT shapes (a, bdim <= 16) the parallel grid collapses
+    to ``ceil(a/ba) == 1`` cell, so on an n_cores > 1 chip the whole
+    reduction runs on one core unless S > 1 re-widens the grid.
+    """
     b = bytes_per_elem(dtype)
-    ga, gm = math.ceil(a / ba), math.ceil(m / bm)
+    ga, gm = math.ceil(a / ba), math.ceil(m / (splits * bm))
     x_bytes = m * a * b
     y_bytes = m * _roundup(bdim, 128) * b * ga   # Y refetched per a-block
-    t_mem = (x_bytes + y_bytes) / spec.hbm_bw
+    out_bytes = (a * _roundup(bdim, 128) * b
+                 + split_partials_bytes(splits, a, bdim))
+    occ = occupancy(ga * splits, spec)
+    t_mem = (x_bytes + y_bytes + out_bytes) / (spec.hbm_bw * occ)
     mxu_eff = min(bdim, spec.lane) / spec.lane
-    t_comp = 2.0 * m * a * bdim / (spec.peak_flops(dtype) * max(mxu_eff, 1e-3))
-    t_lat = spec.dma_latency + ga * gm * spec.step_overhead
+    t_comp = 2.0 * m * a * bdim / (
+        spec.peak_flops(dtype) * max(mxu_eff, 1e-3) * occ)
+    t_lat = spec.dma_latency + ga * gm * splits * spec.step_overhead
     return max(t_mem, t_comp) + t_lat
 
 
@@ -231,6 +284,12 @@ _BM_CANDIDATES = (256, 512, 1024, 2048, 4096)
 _BK_CANDIDATES = (128, 256, 512, 1024, 2048)
 _BM_L_CANDIDATES = (256, 512, 1024, 2048, 4096, 8192, 16384)
 _BA_CANDIDATES = (128, 256, 512, 1024)
+# Split-reduction factors (S partial accumulators over the reduction axis).
+# S=1 is the sequential kernel; the grids below only admit S > 1 when the
+# reduction still has >= one full block per slice (deeper splits would be
+# pure padding). tsm2l has no reduction grid axis (k is resident), so it
+# has no split dimension.
+SPLIT_CANDIDATES = (1, 2, 4, 8, 16)
 
 _TIE_EPS = 1e-12
 
@@ -250,18 +309,23 @@ def _pick_best(scored, tie_key):
 
 
 def tsm2r_candidates(m: int, k: int, n: int, spec: TPUSpec = V5E,
-                     dtype=jnp.bfloat16) -> list[tuple[int, int]]:
-    """All VMEM-feasible (block_m, block_k) candidates for TSM2R.
+                     dtype=jnp.bfloat16) -> list[tuple[int, int, int]]:
+    """All VMEM-feasible (block_m, block_k, splits) candidates for TSM2R.
 
     This is the grid both the analytic argmin (``choose_params_tsm2r``) and
     the measured-time autotuner (``core.autotune``) search over, so the two
-    halves of Algorithm 5 score exactly the same parameter space.
+    halves of Algorithm 5 score exactly the same parameter space. Per-cell
+    VMEM usage is split-invariant (same windows, same accumulator), so the
+    budget filter ignores S; S > 1 requires at least one full (bk) block
+    per reduction slice.
     """
     budget = spec.vmem_bytes * spec.vmem_usable
-    return [(bm, bk)
+    return [(bm, bk, s)
             for bm in _BM_CANDIDATES if bm <= _roundup(m, spec.sublane)
             for bk in _BK_CANDIDATES if bk <= _roundup(k, spec.lane)
-            and tsm2r_vmem_usage(bm, bk, n, dtype) <= budget]
+            and tsm2r_vmem_usage(bm, bk, n, dtype) <= budget
+            for s in SPLIT_CANDIDATES
+            if s == 1 or s * bk <= _roundup(k, spec.lane)]
 
 
 def tsm2l_candidates(m: int, k: int, n: int, spec: TPUSpec = V5E,
@@ -274,32 +338,41 @@ def tsm2l_candidates(m: int, k: int, n: int, spec: TPUSpec = V5E,
 
 
 def tsmt_candidates(m: int, a: int, bdim: int, spec: TPUSpec = V5E,
-                    dtype=jnp.bfloat16) -> list[tuple[int, int]]:
-    """All VMEM-feasible (block_m, block_a) candidates for TSMT."""
+                    dtype=jnp.bfloat16) -> list[tuple[int, int, int]]:
+    """All VMEM-feasible (block_m, block_a, splits) candidates for TSMT.
+
+    m is the reduction here, so S slices the m sweep; S > 1 requires at
+    least one full (bm) block per slice.
+    """
     budget = spec.vmem_bytes * spec.vmem_usable
-    return [(bm, ba)
+    return [(bm, ba, s)
             for bm in _BM_CANDIDATES if bm <= _roundup(m, spec.sublane)
             for ba in _BA_CANDIDATES if ba <= _roundup(a, spec.lane)
-            and tsmt_vmem_usage(bm, ba, bdim, dtype) <= budget]
+            and tsmt_vmem_usage(bm, ba, bdim, dtype) <= budget
+            for s in SPLIT_CANDIDATES
+            if s == 1 or s * bm <= _roundup(m, spec.sublane)]
 
 
 def choose_params_tsm2r(m: int, k: int, n: int, spec: TPUSpec = V5E,
-                        dtype=jnp.bfloat16) -> tuple[int, int]:
-    """Pick (block_m, block_k) minimizing modeled time under the VMEM budget.
+                        dtype=jnp.bfloat16) -> tuple[int, int, int]:
+    """Pick (block_m, block_k, splits) minimizing modeled time under the
+    VMEM budget.
 
     Same contract as the paper's Algorithm 5 (choose t2/t3 per bound class,
     then offline-profile t1): we enumerate the hardware-quantized candidate
-    grid and take the argmin of the modeled time; ties break toward deeper
-    k-pipelines (smaller block_k -- better DMA overlap), residual ties
-    toward larger block_m (fewer B-window re-fetches).
+    grid and take the argmin of the modeled time; ties break toward NOT
+    splitting (S=1 -- partials cost nothing only when modeled equal), then
+    toward deeper k-pipelines (smaller block_k -- better DMA overlap),
+    residual ties toward larger block_m (fewer B-window re-fetches).
     """
     cands = tsm2r_candidates(m, k, n, spec, dtype)
     if not cands:  # tiny problem: single block
         return (min(_roundup(m, spec.sublane), 256),
-                min(_roundup(k, spec.lane), 128))
-    scored = [(tsm2r_model_time(m, k, n, bm, bk, spec, dtype), (bm, bk))
-              for bm, bk in cands]
-    return _pick_best(scored, lambda p: (p[1], -p[0]))
+                min(_roundup(k, spec.lane), 128), 1)
+    scored = [(tsm2r_model_time(m, k, n, bm, bk, spec, dtype, splits=s),
+               (bm, bk, s))
+              for bm, bk, s in cands]
+    return _pick_best(scored, lambda p: (p[2], p[1], -p[0]))
 
 
 def choose_params_tsm2l(m: int, k: int, n: int, spec: TPUSpec = V5E,
@@ -317,20 +390,22 @@ def choose_params_tsm2l(m: int, k: int, n: int, spec: TPUSpec = V5E,
 
 
 def choose_params_tsmt(m: int, a: int, bdim: int, spec: TPUSpec = V5E,
-                       dtype=jnp.bfloat16) -> tuple[int, int]:
-    """Pick (block_m, block_a) for the transposed kernel.
+                       dtype=jnp.bfloat16) -> tuple[int, int, int]:
+    """Pick (block_m, block_a, splits) for the transposed kernel.
 
-    Ties break toward deeper reduction pipelines (smaller block_m -- m is
-    the streamed reduction here), residual ties toward larger block_a
-    (fewer Y-window re-fetches) -- the same rule as the other choosers.
+    Ties break toward not splitting (S=1), then deeper reduction pipelines
+    (smaller block_m -- m is the streamed reduction here), residual ties
+    toward larger block_a (fewer Y-window re-fetches) -- the same rule as
+    the other choosers.
     """
     cands = tsmt_candidates(m, a, bdim, spec, dtype)
     if not cands:
         return (min(_roundup(m, spec.sublane), 256),
-                min(_roundup(a, spec.lane), 128))
-    scored = [(tsmt_model_time(m, a, bdim, bm, ba, spec, dtype), (bm, ba))
-              for bm, ba in cands]
-    return _pick_best(scored, lambda p: (p[0], -p[1]))
+                min(_roundup(a, spec.lane), 128), 1)
+    scored = [(tsmt_model_time(m, a, bdim, bm, ba, spec, dtype, splits=s),
+               (bm, ba, s))
+              for bm, ba, s in cands]
+    return _pick_best(scored, lambda p: (p[2], p[0], -p[1]))
 
 
 # ---------------------------------------------------------------------------
@@ -338,21 +413,24 @@ def choose_params_tsmt(m: int, a: int, bdim: int, spec: TPUSpec = V5E,
 # ---------------------------------------------------------------------------
 
 def modeled_bandwidth_utilization(m: int, k: int, n: int, bm: int, bk: int,
-                                  spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> float:
+                                  spec: TPUSpec = V5E, dtype=jnp.bfloat16,
+                                  *, splits: int = 1) -> float:
     """Fraction of peak HBM bandwidth the kernel sustains (modeled).
 
     util = minimal-bytes / (modeled_time * peak_bw): 1.0 means A/B/C each
     move once at full stream rate -- the paper's definition of success for
-    the memory-bound regime.
+    the memory-bound regime. Pass the chooser's ``splits`` so the
+    utilization describes the same kernel as the modeled time.
     """
     b = bytes_per_elem(dtype)
     min_bytes = (m * k + k * n + m * n) * b
-    t = tsm2r_model_time(m, k, n, bm, bk, spec, dtype)
+    t = tsm2r_model_time(m, k, n, bm, bk, spec, dtype, splits=splits)
     return min(1.0, min_bytes / (t * spec.hbm_bw))
 
 
 def modeled_compute_utilization(m: int, k: int, n: int, bm: int, bk: int,
-                                spec: TPUSpec = V5E, dtype=jnp.bfloat16) -> float:
+                                spec: TPUSpec = V5E, dtype=jnp.bfloat16,
+                                *, splits: int = 1) -> float:
     flops = 2.0 * m * k * n
-    t = tsm2r_model_time(m, k, n, bm, bk, spec, dtype)
+    t = tsm2r_model_time(m, k, n, bm, bk, spec, dtype, splits=splits)
     return min(1.0, flops / (t * spec.peak_flops(dtype)))

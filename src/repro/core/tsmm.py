@@ -220,10 +220,32 @@ class GemmPolicy:
     ``tuning_table``: a ``core.autotune.TuningTable`` of measured-best
     block params (None = pure analytic choice). When set, ``kernels/ops``
     consults the measured winner for the shape's bucket before falling
-    back to ``perf_model.choose_params_*``; explicit per-call block kwargs
-    still win over both. Must stay hashable (policies flow through
+    back to ``perf_model.choose_params_*`` (run under the table's
+    bucket-local fitted spec when one exists); explicit per-call block
+    kwargs still win over both. Must stay hashable (policies flow through
     ``custom_vjp`` nondiff args), which TuningTable is; typed loosely here
     to keep the dispatcher import-cycle-free.
+
+    ``split``: the split-reduction (split-K) knob for the kernels whose
+    reduction axis is gridded (``tsm2r``, ``tsmt``; ``tsm2l`` keeps its
+    whole contraction VMEM-resident and has nothing to split):
+
+    * "auto" (default) -- the split factor S is tuned like a block size:
+      measured winner from the tuning table, else the occupancy-aware
+      analytic argmin (``perf_model.choose_params_*``, which only ever
+      prefers S > 1 when the grid's parallel cells under-occupy
+      ``spec.n_cores``).
+    * an int -- pin exactly that S for every dispatched kernel in scope
+      (1 = sequential). Shape-specific, so :func:`backward_policy` strips
+      it back to "auto" -- the cotangent GEMMs have different shapes.
+    * "never" -- force the sequential kernels everywhere, table and model
+      notwithstanding (the A/B control arm). Scope-wide caller intent, so
+      the backward *preserves* it.
+
+    Split partials are summed inside the op's epilogue, so under the
+    shard_map executors each shard splits its own slice locally and the
+    psum/psum_scatter/none contract on the cross-shard reduction is
+    unchanged -- ``reduce=`` and ``split`` compose freely.
     """
 
     mode: str = "auto"
@@ -240,8 +262,16 @@ class GemmPolicy:
     executor: str | None = None
     tuning_table: object | None = None
     reduce: str = "psum"
+    split: str | int = "auto"
 
     def __post_init__(self):
+        s = self.split
+        if not (s in ("auto", "never")
+                or (isinstance(s, int) and not isinstance(s, bool)
+                    and s >= 1)):
+            raise ValueError(
+                f"unknown GemmPolicy split {self.split!r}: valid values are "
+                "'auto', 'never', or a positive int split factor")
         if self.mode not in _ALL_MODES:
             raise ValueError(
                 f"unknown GemmPolicy mode {self.mode!r}: valid modes are "
@@ -341,12 +371,18 @@ def backward_policy(p: GemmPolicy) -> GemmPolicy:
     recurse per-shard. ``reduce="none"`` downgrades to "psum": a stacked-
     partials gradient would change the cotangent's shape, which custom_vjp
     forbids; "psum_scatter" is kept, so weight-gradient ``tsmm_t``s in the
-    backward land sharded without an extra all-gather."""
+    backward land sharded without an extra all-gather. An *int* ``split``
+    pin is stripped to "auto" (it was chosen for the forward shape; the
+    cotangent GEMMs pick their own), while "never" is preserved -- it is
+    scope-wide intent, like a dense pin."""
     mode = p.mode if p.mode in ("auto", "dense") else "auto"
     reduce_ = "psum" if p.reduce == "none" else p.reduce
-    if mode == p.mode and p.executor is None and reduce_ == p.reduce:
+    split = "auto" if isinstance(p.split, int) else p.split
+    if (mode == p.mode and p.executor is None and reduce_ == p.reduce
+            and split == p.split):
         return p
-    return dataclasses.replace(p, mode=mode, executor=None, reduce=reduce_)
+    return dataclasses.replace(p, mode=mode, executor=None, reduce=reduce_,
+                               split=split)
 
 
 def enabled() -> bool:
@@ -393,20 +429,26 @@ def classify_gemm_t(m: int, a_dim: int, b_dim: int,
 class DispatchEvent:
     """One routing decision: which entry, classified kind, chosen executor,
     and the (tall, minor, minor) shape it was made for. Emitted at trace
-    time -- a cached jit call emits nothing."""
+    time -- a cached jit call emits nothing. ``split`` records the policy's
+    split knob at dispatch ("auto" | "never" | a pinned int) so benchmark
+    arms can assert split-vs-sequential routing; the *resolved* S for
+    "auto" is a kernel-level decision (observable via the ops-level kernel
+    spies in tests)."""
 
     entry: str       # "mm" (A @ B) | "mmt" (X^T Y)
     kind: str        # "tsm2r" | "tsm2l" | "tsmt" | "dense"
     executor: str    # registry key
     shape: tuple[int, int, int]
+    split: str | int = "auto"
 
 
 _LISTENERS: list = []
 
 
-def _notify(entry: str, kind: str, executor: str, shape) -> None:
+def _notify(entry: str, kind: str, executor: str, shape,
+            split: str | int = "auto") -> None:
     if _LISTENERS:
-        ev = DispatchEvent(entry, kind, executor, tuple(shape))
+        ev = DispatchEvent(entry, kind, executor, tuple(shape), split)
         for cb in tuple(_LISTENERS):
             cb(ev)
 
@@ -750,7 +792,7 @@ def tsmm(a: jnp.ndarray, b: jnp.ndarray, *, mode: str | None = None,
     forced = _forced_kind("mm", mode, force, p)
     kind = forced if forced is not None else classify_gemm(m_tall, k, n, p)
     name = _select_executor("mm", kind, m_tall, k, n, p, forced is not None)
-    _notify("mm", kind, name, (m_tall, k, n))
+    _notify("mm", kind, name, (m_tall, k, n), p.split)
     ex = _EXECUTORS[name]
     if a.ndim > 2 and name != "dense-xla":
         out = ex("mm", kind, a.reshape(m_tall, k), b, p)
@@ -783,7 +825,7 @@ def tsmm_t(x: jnp.ndarray, y: jnp.ndarray, *, mode: str | None = None,
             else classify_gemm_t(m_tall, a_dim, b_dim, p))
     name = _select_executor("mmt", kind, m_tall, a_dim, b_dim, p,
                             forced is not None)
-    _notify("mmt", kind, name, (m_tall, a_dim, b_dim))
+    _notify("mmt", kind, name, (m_tall, a_dim, b_dim), p.split)
     return _EXECUTORS[name]("mmt", kind, x, y, p)
 
 

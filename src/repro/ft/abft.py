@@ -15,7 +15,11 @@ schemes.
 
 Cost: one TSMT pass over the params -- at the HBM-roofline that is
 params_bytes / 819 GB/s per verification (e.g. 8 ms for a 3B model across
-a pod), cheap enough to run at checkpoint boundaries.
+a pod), cheap enough to run at checkpoint boundaries. With s <= 8 output
+columns the TSMT grid has ONE parallel cell: on multi-core parts scope
+``with tsmm.policy(split=...)`` around encode/verify so the split-
+reduction kernels keep every core on the stream (the default "auto"
+engages exactly when the perf model's occupancy term says it pays).
 """
 
 from __future__ import annotations

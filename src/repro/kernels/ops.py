@@ -1,12 +1,17 @@
 """Public jit'd entry points for the TSM2X kernels.
 
-Handles: block-size selection (measured winners from
-``GemmPolicy.tuning_table`` when present, else the analytic perf model
-driven by ``GemmPolicy.spec``; explicit per-call block kwargs beat both),
-padding to block multiples (zero-padding is exact for GEMM), interpret-mode
+Handles: block-size AND split-factor selection (measured winners from
+``GemmPolicy.tuning_table`` when present, else the analytic perf model --
+run under the table's bucket-local fitted spec when it has one; explicit
+per-call block/``splits=`` kwargs beat both, and ``GemmPolicy.split`` pins
+S scope-wide), padding to block multiples (zero-padding is exact for GEMM;
+split paths pad the reduction to whole S-slices), interpret-mode
 resolution (policy field; auto-detect runs kernel bodies in Python on CPU
 and compiles via Mosaic on TPU), and lane-dim padding of skinny minor dims
-when lowering for real TPUs.
+when lowering for real TPUs. Split (S > 1) dispatch runs the
+``*_pallas_split`` kernel and sums the (S, ...) f32 partials through
+``repro.kernels.reduce.reduce_partials`` before slicing off the padding,
+so callers see the exact sequential-kernel contract.
 
 All three entries carry ``jax.custom_vjp`` rules that take the resolved
 ``GemmPolicy`` through their nondiff args, so the backward re-enters
@@ -47,9 +52,17 @@ import jax.numpy as jnp
 
 from repro.core import perf_model
 from repro.kernels import compat, ref
+from repro.kernels.reduce import reduce_partials
 from repro.kernels.tsm2l import tsm2l_pallas
-from repro.kernels.tsm2r import tsm2r_pallas
-from repro.kernels.tsmt import tsmt_pallas
+from repro.kernels.tsm2r import tsm2r_pallas, tsm2r_pallas_split
+from repro.kernels.tsmt import tsmt_pallas, tsmt_pallas_split
+
+# The TSMT kernels keep their (block_a, b) f32 accumulator as ONE unblocked
+# VMEM tile, so the small output dim is hard-limited (the classifier's
+# max_skinny_t default is derived from the same t2_threshold ~ 481, rounded
+# up to the lane multiple). Past it, ops.tsmt refuses loudly instead of
+# silently compiling a huge accumulator tile.
+TSMT_MAX_B = 512
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -91,6 +104,9 @@ def _tuned_params(policy, kind, dims, dtype, interpret) -> dict | None:
     The table is keyed by (kind, shape bucket, dtype, spec name, executor);
     the executor key matches how this call will actually run, so a table
     tuned in interpret mode never silences the analytic model on hardware.
+    Records tuned before the split-reduction dimension existed carry no
+    "splits" key; consumers default it to 1 (the sequential kernel they
+    actually measured).
     """
     table = policy.tuning_table
     if table is None:
@@ -101,45 +117,101 @@ def _tuned_params(policy, kind, dims, dtype, interpret) -> dict | None:
     return None if rec is None else rec.params_dict
 
 
+def _analytic_spec(policy, kind, dims, dtype):
+    """Spec driving the analytic parameter choice for this shape: the
+    tuning table's bucket-local fitted constants when it carries any
+    (``TuningTable.fitted_spec`` -- bucket fit first, global fit second),
+    else the policy's spec unchanged. Duck-typed so pre-fit tables (and
+    any hashable stand-in) keep working."""
+    table = policy.tuning_table
+    fitted = getattr(table, "fitted_spec", None)
+    if fitted is None:
+        return policy.spec
+    return fitted(kind, *dims, dtype=dtype, spec=policy.spec)
+
+
+def _policy_split(policy) -> int | None:
+    """The policy's split pin as an int, or None for "auto" (resolve from
+    the tuning table / analytic chooser)."""
+    s = policy.split
+    if s == "never":
+        return 1
+    if s == "auto":
+        return None
+    return int(s)
+
+
+def _vmem_budget(policy) -> int:
+    return int(policy.spec.vmem_bytes * policy.spec.vmem_usable)
+
+
 # ---------------------------------------------------------------------------
 # TSM2R
 # ---------------------------------------------------------------------------
 
-def _tsm2r_impl(a, b, block_m, block_k, policy):
+def _tsm2r_impl(a, b, block_m, block_k, splits, policy):
     m, k = a.shape
     n = b.shape[1]
     interpret = _resolve_interpret(policy)
-    if block_m is None or block_k is None:
+    explicit_bk = block_k is not None
+    if splits is None:
+        splits = _policy_split(policy)
+    if block_m is None or block_k is None or splits is None:
         tuned = _tuned_params(policy, "tsm2r", (m, k, n), a.dtype, interpret)
         if tuned is None:
-            bm, bk = perf_model.choose_params_tsm2r(m, k, n, policy.spec,
-                                                    a.dtype)
+            bm, bk, s = perf_model.choose_params_tsm2r(
+                m, k, n, _analytic_spec(policy, "tsm2r", (m, k, n), a.dtype),
+                a.dtype)
         else:
             bm, bk = tuned["block_m"], tuned["block_k"]
+            s = tuned.get("splits", 1)
         block_m = block_m or bm
         block_k = block_k or bk
+        if splits is None:
+            splits = s
     block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
     # block_k is a lane dim of the A window: clamp with the same lane
     # quantization the perf model's candidate filter uses, so the block the
     # kernel runs is the block the VMEM budget was checked against.
     block_k = min(block_k, _ceil_mult(k, policy.spec.lane))
-    a_p = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
-    b_p = _pad_to(b, 0, block_k)
-    out = tsm2r_pallas(a_p, b_p, block_m=block_m, block_k=block_k,
-                       interpret=interpret)
+    if splits > 1 and not explicit_bk:
+        # A pinned S must be honored even when the chooser (which assumed
+        # its own S) picked a block too deep for S whole slices: shrink
+        # the reduction block -- unless the caller pinned it explicitly,
+        # in which case the block wins and S clamps below.
+        block_k = min(block_k,
+                      _ceil_mult(-(-k // splits), policy.spec.lane))
+    # Each reduction slice must own >= one block, or the extra slices are
+    # pure zero-padding work: clamp S like the candidate filter does.
+    splits = max(1, min(splits, -(-k // block_k)))
+    if splits == 1:
+        a_p = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
+        b_p = _pad_to(b, 0, block_k)
+        out = tsm2r_pallas(a_p, b_p, block_m=block_m, block_k=block_k,
+                           interpret=interpret)
+        return out[:m]
+    # Split reduction: pad k so every slice is whole (zero-padding is exact
+    # for GEMM, so m % (S*bk) non-multiples cost only the padded stream).
+    a_p = _pad_to(_pad_to(a, 0, block_m), 1, splits * block_k)
+    b_p = _pad_to(b, 0, splits * block_k)
+    parts = tsm2r_pallas_split(a_p, b_p, block_m=block_m, block_k=block_k,
+                               splits=splits, interpret=interpret)
+    out = reduce_partials(parts, a.dtype, block_r=block_m,
+                          vmem_budget=_vmem_budget(policy),
+                          interpret=interpret)
     return out[:m]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _tsm2r_diff(a, b, block_m, block_k, policy):
-    return _tsm2r_impl(a, b, block_m, block_k, policy)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _tsm2r_diff(a, b, block_m, block_k, splits, policy):
+    return _tsm2r_impl(a, b, block_m, block_k, splits, policy)
 
 
-def _tsm2r_fwd(a, b, block_m, block_k, policy):
-    return _tsm2r_impl(a, b, block_m, block_k, policy), (a, b)
+def _tsm2r_fwd(a, b, block_m, block_k, splits, policy):
+    return _tsm2r_impl(a, b, block_m, block_k, splits, policy), (a, b)
 
 
-def _tsm2r_bwd(block_m, block_k, policy, res, ct):
+def _tsm2r_bwd(block_m, block_k, splits, policy, res, ct):
     a, b = res
     tsmm = _dispatcher()
     bp = tsmm.backward_policy(policy)
@@ -156,13 +228,18 @@ _tsm2r_diff.defvjp(_tsm2r_fwd, _tsm2r_bwd)
 
 
 def tsm2r(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
-          block_k: int | None = None,
+          block_k: int | None = None, splits: int | None = None,
           spec: perf_model.TPUSpec | None = None,
           interpret: bool | None = None,
           policy=None) -> jnp.ndarray:
-    """C[m,n] = A[m,k] @ B[k,n], m ~ k >> n. Paper's TSM2R. Differentiable."""
+    """C[m,n] = A[m,k] @ B[k,n], m ~ k >> n. Paper's TSM2R. Differentiable.
+
+    ``splits=`` pins the split-reduction factor per call (like the block
+    kwargs it beats the policy, the tuning table, and the model; S=1 is
+    the sequential kernel).
+    """
     p = _effective_policy(policy, spec, interpret)
-    return _tsm2r_diff(a, b, block_m, block_k, p)
+    return _tsm2r_diff(a, b, block_m, block_k, splits, p)
 
 
 # ---------------------------------------------------------------------------
@@ -176,8 +253,9 @@ def _tsm2l_impl(a, b, block_m, policy):
     if block_m is None:
         tuned = _tuned_params(policy, "tsm2l", (m, k, n), a.dtype, interpret)
         block_m = (tuned["block_m"] if tuned is not None else
-                   perf_model.choose_params_tsm2l(m, k, n, policy.spec,
-                                                  a.dtype))
+                   perf_model.choose_params_tsm2l(
+                       m, k, n, _analytic_spec(policy, "tsm2l", (m, k, n),
+                                               a.dtype), a.dtype))
     block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
     a_p = _pad_to(a, 0, block_m)
     out = tsm2l_pallas(a_p, b, block_m=block_m, interpret=interpret)
@@ -220,41 +298,67 @@ def tsm2l(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int | None = None,
 # TSMT
 # ---------------------------------------------------------------------------
 
-def _tsmt_impl(x, y, block_m, block_a, policy):
+def _tsmt_impl(x, y, block_m, block_a, splits, policy):
     m, a_dim = x.shape
     b_dim = y.shape[1]
     interpret = _resolve_interpret(policy)
-    if block_m is None or block_a is None:
+    explicit_bm = block_m is not None
+    if splits is None:
+        splits = _policy_split(policy)
+    if block_m is None or block_a is None or splits is None:
         tuned = _tuned_params(policy, "tsmt", (m, a_dim, b_dim), x.dtype,
                               interpret)
         if tuned is None:
-            bm, ba = perf_model.choose_params_tsmt(m, a_dim, b_dim,
-                                                   policy.spec, x.dtype)
+            bm, ba, s = perf_model.choose_params_tsmt(
+                m, a_dim, b_dim,
+                _analytic_spec(policy, "tsmt", (m, a_dim, b_dim), x.dtype),
+                x.dtype)
         else:
             bm, ba = tuned["block_m"], tuned["block_a"]
+            s = tuned.get("splits", 1)
         block_m = block_m or bm
         block_a = block_a or ba
+        if splits is None:
+            splits = s
     block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
     # block_a is a lane dim of the X window: lane-quantized clamp, matching
     # the perf model's candidate filter (see _tsm2r_impl).
     block_a = min(block_a, _ceil_mult(a_dim, policy.spec.lane))
-    x_p = _pad_to(_pad_to(x, 0, block_m), 1, block_a)
-    y_p = _pad_to(y, 0, block_m)
-    out = tsmt_pallas(x_p, y_p, block_m=block_m, block_a=block_a,
-                      interpret=interpret)
+    if splits > 1 and not explicit_bm:
+        # honor a pinned S by shrinking the reduction block (m here);
+        # an explicit block_m kwarg wins and S clamps instead.
+        block_m = min(block_m,
+                      _ceil_mult(-(-m // splits), policy.spec.sublane))
+    # m is the reduction here: each slice must own >= one m block.
+    splits = max(1, min(splits, -(-m // block_m)))
+    if splits == 1:
+        x_p = _pad_to(_pad_to(x, 0, block_m), 1, block_a)
+        y_p = _pad_to(y, 0, block_m)
+        out = tsmt_pallas(x_p, y_p, block_m=block_m, block_a=block_a,
+                          interpret=interpret)
+        return out[:a_dim]
+    # Split reduction over m: pad to whole slices (zeros contribute
+    # nothing to the partial sums), reduce the (S, a, b) f32 stack.
+    x_p = _pad_to(_pad_to(x, 0, splits * block_m), 1, block_a)
+    y_p = _pad_to(y, 0, splits * block_m)
+    parts = tsmt_pallas_split(x_p, y_p, block_m=block_m, block_a=block_a,
+                              splits=splits, interpret=interpret)
+    out = reduce_partials(parts, x.dtype, block_r=block_a,
+                          vmem_budget=_vmem_budget(policy),
+                          interpret=interpret)
     return out[:a_dim]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _tsmt_diff(x, y, block_m, block_a, policy):
-    return _tsmt_impl(x, y, block_m, block_a, policy)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _tsmt_diff(x, y, block_m, block_a, splits, policy):
+    return _tsmt_impl(x, y, block_m, block_a, splits, policy)
 
 
-def _tsmt_fwd(x, y, block_m, block_a, policy):
-    return _tsmt_impl(x, y, block_m, block_a, policy), (x, y)
+def _tsmt_fwd(x, y, block_m, block_a, splits, policy):
+    return _tsmt_impl(x, y, block_m, block_a, splits, policy), (x, y)
 
 
-def _tsmt_bwd(block_m, block_a, policy, res, ct):
+def _tsmt_bwd(block_m, block_a, splits, policy, res, ct):
     x, y = res
     tsmm = _dispatcher()
     bp = tsmm.backward_policy(policy)
@@ -269,14 +373,30 @@ _tsmt_diff.defvjp(_tsmt_fwd, _tsmt_bwd)
 
 
 def tsmt(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int | None = None,
-         block_a: int | None = None,
+         block_a: int | None = None, splits: int | None = None,
          spec: perf_model.TPUSpec | None = None,
          interpret: bool | None = None,
          policy=None) -> jnp.ndarray:
     """C[a,b] = X[m,a]^T @ Y[m,b], m >> a, b. TSMTTSM-style extension.
-    Differentiable."""
+    Differentiable.
+
+    ``splits=`` pins the split-reduction factor per call (S=1 sequential).
+    Raises ``ValueError`` when the unblocked output dim b exceeds the
+    accumulator limit -- ``TSMT_MAX_B``, or the scope's ``max_skinny_t``
+    when a policy deliberately raised the classifier past it (raising the
+    threshold is an explicit opt-in to the bigger VMEM tile); reorient the
+    operands (or use ``tsmm.tsmm``) instead.
+    """
     p = _effective_policy(policy, spec, interpret)
-    return _tsmt_diff(x, y, block_m, block_a, p)
+    limit = max(TSMT_MAX_B, getattr(p, "max_skinny_t", TSMT_MAX_B))
+    if y.ndim == 2 and y.shape[1] > limit:
+        raise ValueError(
+            f"tsmt small output dim b={y.shape[1]} exceeds the unblocked "
+            f"f32 accumulator limit ({limit}): the (block_a, b) "
+            "accumulator is a single VMEM tile. Orient the operands so the "
+            "larger output dim comes first (C = tsmt(y, x).T), or dispatch "
+            "through tsmm.tsmm_t, which classifies such shapes dense.")
+    return _tsmt_diff(x, y, block_m, block_a, splits, p)
 
 
 def _ceil_mult(x: int, q: int) -> int:

@@ -21,7 +21,15 @@ staging + data prefetch):
   to 128 (done by ``ops.tsm2r`` when lowering for real TPUs).
 
 Block sizes (bm, bk) come from ``repro.core.perf_model.choose_params_tsm2r``,
-the discrete Algorithm-5 analogue.
+the discrete Algorithm-5 analogue -- which also picks the split factor S for
+``tsm2r_pallas_split``, the split-reduction variant: the k sweep is cut into
+S independent parallel slices (grid ``(S, m/bm, k/(S*bk))``,
+``dimension_semantics=("parallel", "parallel", "arbitrary")``) emitting an
+``(S, m, n)`` stack of f32 partials that
+``repro.kernels.reduce.reduce_partials`` sums. Splitting widens the parallel
+grid when ``m/bm`` alone cannot occupy a multi-core chip, at the cost of the
+partials round trip -- the occupancy term in ``tsm2r_model_time`` prices
+exactly that trade.
 """
 
 from __future__ import annotations
@@ -81,6 +89,58 @@ def tsm2r_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int, block_k: int,
         scratch_shapes=[compat.VMEM((block_m, n), jnp.float32)],
         compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)
+
+
+def _tsm2r_split_kernel(a_ref, b_ref, o_ref):
+    """One grid cell of reduction slice s: O[s][bm, n] += A B over the
+    slice's k blocks. The f32 output block is invariant in the inner
+    sequential axis (VMEM-resident across the slice) -- no scratch."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "splits",
+                                             "interpret"))
+def tsm2r_pallas_split(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int,
+                       block_k: int, splits: int,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Split-reduction TSM2R: returns the ``(splits, m, n)`` f32 partials.
+
+    Requires ``m % block_m == 0`` and ``k % (splits * block_k) == 0``
+    (``ops.tsm2r`` pads). Grid ``(splits, m/bm, k/(S*bk))``: slices are
+    parallel, each sweeps its own k range sequentially. Callers sum the
+    leading axis (``repro.kernels.reduce.reduce_partials``).
+    """
+    if interpret is None:
+        interpret = compat.auto_interpret()
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % block_m == 0 and k % (splits * block_k) == 0, \
+        (m, k, block_m, block_k, splits)
+    steps = k // (splits * block_k)   # k blocks per reduction slice
+    grid = (splits, m // block_m, steps)
+
+    return pl.pallas_call(
+        _tsm2r_split_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k),
+                         lambda s, i, j: (i, s * steps + j)),
+            pl.BlockSpec((block_k, n), lambda s, i, j: (s * steps + j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, n), lambda s, i, j: (s, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((splits, m, n), jnp.float32),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(a, b)

@@ -17,7 +17,18 @@ are small. The TPU formulation:
   double-buffered VMEM exactly once per a-block.
 * The second output dim (b) must be small (<= ~512): it stays unblocked so
   the accumulator is a single VMEM tile. Callers orient their operands so
-  the large output dim is first (ops.tsmt handles this).
+  the large output dim is first (ops.tsmt handles this; it raises a clear
+  ValueError past the limit instead of compiling a huge accumulator).
+
+Split reduction (``tsmt_pallas_split``): with PowerSGD/ABFT shapes
+(a, b <= 16) the parallel grid dim collapses to ``a/ba == 1`` cell, so one
+core sweeps the entire m reduction while the rest of the chip idles. The
+split variant cuts the m sweep into S independent slices -- grid
+``(S, a/ba, m/(S*bm))`` with ``dimension_semantics=("parallel",
+"parallel", "arbitrary")`` -- each accumulating its own f32 partial into an
+``(S, a, b)`` stack; ``repro.kernels.reduce.reduce_partials`` sums the
+stack. This is the TSM paper's leap-based global-reduce, discretized:
+occupancy x S for one extra (tiny) partials round trip.
 """
 
 from __future__ import annotations
@@ -78,6 +89,62 @@ def tsmt_pallas(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int, block_a: int,
         scratch_shapes=[compat.VMEM((block_a, b), jnp.float32)],
         compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, y)
+
+
+def _tsmt_split_kernel(x_ref, y_ref, o_ref):
+    """One grid cell of reduction slice s: O[s][ba, b] += X^T Y over the
+    slice's m blocks. The output block is f32 and invariant in the inner
+    sequential axis, so it stays VMEM-resident across the slice's sweep --
+    no scratch accumulator needed."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...], y_ref[...],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_a", "splits",
+                                             "interpret"))
+def tsmt_pallas_split(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int,
+                      block_a: int, splits: int,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Split-reduction TSMT: returns the ``(splits, a, b)`` f32 partials.
+
+    Requires ``m % (splits * block_m) == 0`` and ``a % block_a == 0``
+    (``ops.tsmt`` pads). Grid ``(splits, a/ba, m/(S*bm))``: the first two
+    dims are parallel (slices are independent), the third sweeps one
+    slice's m blocks sequentially. Callers sum the leading axis
+    (``repro.kernels.reduce.reduce_partials``).
+    """
+    if interpret is None:
+        interpret = compat.auto_interpret()
+    m, a = x.shape
+    m2, b = y.shape
+    assert m == m2, (x.shape, y.shape)
+    assert m % (splits * block_m) == 0 and a % block_a == 0, \
+        (m, a, block_m, block_a, splits)
+    steps = m // (splits * block_m)   # m blocks per reduction slice
+    grid = (splits, a // block_a, steps)
+
+    return pl.pallas_call(
+        _tsmt_split_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_a),
+                         lambda s, i, j: (s * steps + j, i)),
+            pl.BlockSpec((block_m, b), lambda s, i, j: (s * steps + j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_a, b), lambda s, i, j: (s, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((splits, a, b), jnp.float32),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(x, y)

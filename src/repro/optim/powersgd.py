@@ -19,6 +19,12 @@ follows the active ``tsmm.policy(...)`` scope (or an explicit ``policy=``
 passed here); ``with tsmm.policy(mode="dense")`` A/Bs the whole protocol
 against stock XLA dots.
 
+The second projection is THE occupancy-starved kernel shape of the
+framework (r <= 16 collapses the TSMT grid's parallel dim to one cell):
+``with tsmm.policy(split=...)`` around the compress step engages the
+split-reduction kernels -- per shard, inside the op's epilogue, so the
+sharded variants' psum_scatter schedule below is byte-for-byte unchanged.
+
 Two executions of the same protocol:
 
 * ``compress_one``/``compress_tree`` -- the replicated oracle: the caller

@@ -139,7 +139,7 @@ def test_tuning_table_overrides_analytic_choice(tsm2r_spy):
     # same call without the table: analytic params, same numerics.
     with tsmm.policy(interpret=True):
         tsmm.tsmm(a, b)
-    assert tuple(tsm2r_spy[-1].values()) == analytic
+    assert tuple(tsm2r_spy[-1].values()) == analytic[:2]
 
 
 def test_explicit_block_kwargs_beat_table(tsm2r_spy):
@@ -163,7 +163,105 @@ def test_table_miss_on_other_executor_falls_back(tsm2r_spy):
                                               a.dtype)
     with tsmm.policy(tuning_table=tbl, interpret=True):
         tsmm.tsmm(a, b)
-    assert tuple(tsm2r_spy[-1].values()) == analytic
+    assert tuple(tsm2r_spy[-1].values()) == analytic[:2]
+
+
+# ---------------------------------------------------------------------------
+# Schema back-compat (v1 tables: no "splits" param, no "fits" block)
+# ---------------------------------------------------------------------------
+
+def _v1_payload(m=4096, k=1024, n=8):
+    return {
+        "schema": "repro-tsm2x-tuning/1",
+        "records": [{
+            "key": "ignored-on-load",
+            "kind": "tsm2r", "bucket": [m, k, n], "dtype": "float32",
+            "spec": "tpu_v5e", "executor": "interpret", "shape": [m, k, n],
+            "params": {"block_m": 256, "block_k": 128},
+            "measured_us": 10.0, "model_us": 9.0, "model_error": 0.1,
+            "model_pick": {"block_m": 256, "block_k": 128},
+            "model_pick_measured_us": 10.0,
+        }],
+    }
+
+
+def test_v1_table_loads_and_defaults_to_sequential(tsm2r_spy):
+    """Pre-split tables (schema /1) must keep loading; their records carry
+    no "splits" key, so consumption runs the sequential kernel they
+    actually measured -- and fitted_spec is the identity."""
+    tbl = autotune.TuningTable.from_json(_v1_payload())
+    rec = tbl.lookup("tsm2r", 4096, 1024, 8, dtype=jnp.float32,
+                     spec="tpu_v5e", executor="interpret")
+    assert rec is not None and "splits" not in rec.params_dict
+    assert tbl.fitted_spec("tsm2r", 4096, 1024, 8, dtype=jnp.float32,
+                           spec=perf_model.V5E) == perf_model.V5E
+    a, b = _rand(10, (4096, 1024)), _rand(11, (1024, 8))
+    with tsmm.policy(tuning_table=tbl, interpret=True):
+        got = tsmm.tsmm(a, b)
+    assert tsm2r_spy[-1] == {"block_m": 256, "block_k": 128}  # sequential
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.tsm2r_ref(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_table_roundtrips_splits_and_fits(tmp_path):
+    """The v2 additions survive save/load: splits in record params, the
+    per-bucket + global fits block."""
+    rec = _record(params={"block_m": 256, "block_k": 128, "splits": 4})
+    fits = (
+        autotune.SpecFit("tsm2r", autotune.bucket_shape(4096, 1024, 8),
+                         "float32", "tpu_v5e", 1e-6, 2e-6,
+                         vmem_usable=0.75),
+        autotune.SpecFit(*autotune.GLOBAL_FIT, "tpu_v5e", 3e-7, 1.5e-6),
+    )
+    tbl = autotune.TuningTable.from_records([rec], fits)
+    path = tmp_path / "v2.json"
+    tbl.save(path)
+    loaded = autotune.TuningTable.load(path)
+    assert loaded == tbl
+    hit = loaded.lookup("tsm2r", 4096, 1024, 8, dtype=jnp.float32,
+                        spec="tpu_v5e", executor="interpret")
+    assert hit.params_dict["splits"] == 4
+    # bucket-local fit wins over the global cell; off-bucket gets global
+    local = loaded.fitted_spec("tsm2r", 4096, 1024, 8, dtype=jnp.float32,
+                               spec=perf_model.V5E)
+    assert (local.step_overhead, local.dma_latency) == (1e-6, 2e-6)
+    # the fitted vmem budget rides along (and only ever widens)
+    assert local.vmem_usable == 0.75
+    other = loaded.fitted_spec("tsmt", 65536, 64, 8, dtype=jnp.float32,
+                               spec=perf_model.V5E)
+    assert (other.step_overhead, other.dma_latency) == (3e-7, 1.5e-6)
+    # the global cell carries no vmem correction: budget untouched
+    assert other.vmem_usable == perf_model.V5E.vmem_usable
+
+
+def test_bucket_fit_drives_analytic_choice(tsm2r_spy):
+    """A table with NO record for the bucket but a bucket-local fit must
+    run the analytic chooser under the fitted constants: a zero-latency
+    fit flips the tsm2r tie-break to the deepest k-pipeline (bk=128),
+    which the stock V5E constants would never pick for this shape."""
+    m, k, n = 4096, 1024, 8
+    stock = perf_model.choose_params_tsm2r(m, k, n, perf_model.V5E,
+                                           jnp.float32)
+    fit = autotune.SpecFit("tsm2r", autotune.bucket_shape(m, k, n),
+                           "float32", "tpu_v5e", 0.0, 0.0)
+    tbl = autotune.TuningTable.from_records([], [fit])
+    a, b = _rand(12, (m, k)), _rand(13, (k, n))
+    with tsmm.policy(tuning_table=tbl, interpret=True):
+        tsmm.tsmm(a, b)
+    assert tsm2r_spy[-1]["block_k"] == 128 != stock[1]
+
+
+def test_calibrate_populates_per_bucket_fits():
+    pol = tsmm.GemmPolicy(interpret=True)
+    res = autotune.calibrate([("tsm2r", 1024, 256, 8), ("tsmt", 1024, 64, 8)],
+                             dtype=jnp.float32, policy=pol, reps=1, warmup=0)
+    fits = {(f.kind, f.bucket) for f in res.table.fits}
+    assert ("*", (0, 0, 0)) in fits              # the global cell
+    assert ("tsm2r", autotune.bucket_shape(1024, 256, 8)) in fits
+    assert ("tsmt", autotune.bucket_shape(1024, 64, 8)) in fits
+    # the table stays policy-hashable with fits attached
+    assert hash(tsmm.GemmPolicy(tuning_table=res.table)) is not None
 
 
 # ---------------------------------------------------------------------------
@@ -177,7 +275,8 @@ def test_autotune_shape_produces_consistent_record():
     assert rec.kind == "tsm2r" and rec.executor == "interpret"
     assert rec.shape == (1024, 256, 8)
     cands = perf_model.tsm2r_candidates(1024, 256, 8, pol.spec, jnp.float32)
-    assert tuple(rec.params_dict[k] for k in ("block_m", "block_k")) in cands
+    assert tuple(rec.params_dict[k]
+                 for k in ("block_m", "block_k", "splits")) in cands
     assert rec.measured_us > 0 and rec.model_error >= 0
     assert rec.model_pick_measured_us > 0  # the analytic pick was timed too
     tbl = autotune.TuningTable.from_records([rec])

@@ -64,3 +64,37 @@ def test_gate_new_arm_must_pass_itself():
         {"arm": "new", "expected": "x", "observed": ["y"], "ok": False})
     failures = gate.check(cur, _report())
     assert len(failures) == 1 and "(new) failed" in failures[0]
+
+
+def test_update_baseline_rewrites_and_then_gates_clean(tmp_path, capsys):
+    import json
+
+    cur_path = tmp_path / "BENCH_cur.json"
+    base_path = tmp_path / "BENCH_baseline.json"
+    current = _report(measured_us=321.0)
+    cur_path.write_text(json.dumps(current))
+    base_path.write_text(json.dumps(_report(measured_us=1.0)))  # stale
+
+    gate.main([str(cur_path), "--baseline", str(base_path),
+               "--update-baseline"])
+    assert "baseline updated" in capsys.readouterr().out
+    assert json.loads(base_path.read_text()) == current
+    # the refreshed baseline gates the same report clean
+    gate.main([str(cur_path), "--baseline", str(base_path)])
+    assert "OK" in capsys.readouterr().out
+
+
+def test_update_baseline_refuses_failing_report(tmp_path):
+    import json
+
+    import pytest
+
+    cur_path = tmp_path / "BENCH_bad.json"
+    base_path = tmp_path / "BENCH_baseline.json"
+    cur_path.write_text(json.dumps(_report(arm_ok=False)))
+    base_path.write_text(json.dumps(_report()))
+    with pytest.raises(SystemExit):
+        gate.main([str(cur_path), "--baseline", str(base_path),
+                   "--update-baseline"])
+    # the baseline file is untouched
+    assert json.loads(base_path.read_text()) == _report()

@@ -80,7 +80,8 @@ def test_tsm2r_block_quantization_matches_model(monkeypatch):
     a = _rand(jax.random.PRNGKey(0), (m, k), jnp.float32)
     b = _rand(jax.random.PRNGKey(1), (k, n), jnp.float32)
     got = ops.tsm2r(a, b, interpret=True)
-    bm, bk = perf_model.choose_params_tsm2r(m, k, n, perf_model.V5E, a.dtype)
+    bm, bk, _ = perf_model.choose_params_tsm2r(m, k, n, perf_model.V5E,
+                                               a.dtype)
     assert (seen["block_m"], seen["block_k"]) == (bm, bk)
     assert seen["block_k"] % perf_model.V5E.lane == 0
     np.testing.assert_allclose(got, ref.tsm2r_ref(a, b), rtol=1e-4, atol=1e-4)
@@ -101,8 +102,8 @@ def test_tsmt_block_quantization_matches_model(monkeypatch):
     x = _rand(jax.random.PRNGKey(2), (m, a_dim), jnp.float32)
     y = _rand(jax.random.PRNGKey(3), (m, b_dim), jnp.float32)
     got = ops.tsmt(x, y, interpret=True)
-    bm, ba = perf_model.choose_params_tsmt(m, a_dim, b_dim, perf_model.V5E,
-                                           x.dtype)
+    bm, ba, _ = perf_model.choose_params_tsmt(m, a_dim, b_dim, perf_model.V5E,
+                                              x.dtype)
     assert (seen["block_m"], seen["block_a"]) == (bm, ba)
     np.testing.assert_allclose(got, ref.tsmt_ref(x, y), rtol=1e-4, atol=1e-4)
 
@@ -245,7 +246,7 @@ def test_perf_model_threshold_value():
 
 
 def test_param_chooser_respects_vmem():
-    bm, bk = perf_model.choose_params_tsm2r(30720, 30720, 16)
+    bm, bk, _ = perf_model.choose_params_tsm2r(30720, 30720, 16)
     use = perf_model.tsm2r_vmem_usage(bm, bk, 16, jnp.bfloat16)
     assert use <= perf_model.V5E.vmem_bytes * perf_model.V5E.vmem_usable
     assert bm % 8 == 0 and bk % 8 == 0

@@ -136,6 +136,29 @@ np.testing.assert_allclose(np.asarray(q_s), np.asarray(st_o["q"]),
                            rtol=1e-4, atol=1e-4)
 assert {s.data.shape for s in q_s.addressable_shards} == {(d2 // 2, cfg.rank)}
 
+# --- split reduction per shard: collective contracts unchanged -----------
+# GemmPolicy.split composes with reduce=: partials are summed inside each
+# shard's kernel epilogue, so the psum arm stays replicated and the
+# psum_scatter arm stays row-sharded, both oracle-equal; the split knob is
+# visible on every dispatch event down to the per-shard re-dispatch.
+for reduce_, expect_exec, expect_shard in (
+    ("psum", "shard_map", (64, 8)),
+    ("psum_scatter", "shard_map-scatter", (32, 8)),
+):
+    with mesh:
+        with tsmm.policy(reduce=reduce_, split=2):
+            with tsmm.record_dispatches() as log:
+                q_split = jax.jit(lambda x_, y_: tsmm.tsmm_t(x_, y_))(x, y)
+    execs = {(e.executor, e.split) for e in log}
+    assert (expect_exec, 2) in execs, (reduce_, execs)
+    assert ("pallas-tpu", 2) in execs, (reduce_, execs)
+    assert {s.data.shape for s in q_split.addressable_shards} == {
+        expect_shard
+    }, (reduce_, q_split.addressable_shards)
+    np.testing.assert_allclose(
+        np.asarray(q_split), np.asarray(x.T @ y), rtol=2e-3, atol=2e-3
+    )
+
 # --- dp_axes derived from an unconventionally named mesh -----------------
 mesh_r = Mesh(np.array(devs), ("replica",))
 assert tsmm.derive_dp_axes(mesh_r) == ("replica",)
