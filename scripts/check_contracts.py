@@ -1,0 +1,37 @@
+#!/usr/bin/env python
+"""CI entry for the static-analysis layer: contract audit + repo linter.
+
+Runs ``repro.analysis.audit --strict`` (kernel-launch contracts over the
+full configuration space, committed tuning table, bench dispatch arms)
+and ``repro.analysis.lint`` (repo invariant linter) in one process; exits
+non-zero if either finds a violation. Pass-through flags go to the
+auditor, so ``scripts/check_contracts.py --json report.json`` artifacts
+the machine-readable report.
+
+Equivalent to::
+
+    PYTHONPATH=src python -m repro.analysis.audit --strict [flags]
+    PYTHONPATH=src python -m repro.analysis.lint
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis import audit, lint  # noqa: E402
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--strict" not in argv:
+        argv.append("--strict")
+    audit_rc = audit.main(argv)
+    lint_rc = lint.main([])
+    return audit_rc or lint_rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

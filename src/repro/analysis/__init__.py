@@ -1,0 +1,26 @@
+"""Static analysis for the TSM2X framework: decidable-offline guarantees.
+
+Two layers, both consumed by CI (the ``analysis`` job) and by tests:
+
+* :mod:`repro.analysis.contracts` -- the single source of truth for every
+  kernel-feasibility predicate the runtime choosers enforce (VMEM
+  footprint, lane/sublane quantization, split-K whole-slice feasibility,
+  grid divisibility, the TSMT accumulator limit, psum_scatter
+  divisibility, backward-policy semantics). ``core.perf_model`` and
+  ``kernels.ops`` call these predicates instead of carrying private
+  copies, so the model can never again score a block the kernel won't run
+  (the PR-3 lane-mismatch class).
+* :mod:`repro.analysis.audit` -- the standalone auditor
+  (``python -m repro.analysis.audit``): sweeps the full candidate grids,
+  committed tuning tables, reachable GemmPolicy combinations, the
+  executor registry and the benchmark baseline's dispatch-sanity arms
+  against the contracts, emitting a machine-readable violations report.
+* :mod:`repro.analysis.lint` -- AST-based repo invariant linter (layer
+  boundaries: ``jax._src`` confinement, tsmm-routed parameter matmuls,
+  env reads, executor reduce-contract declarations).
+"""
+
+from repro.analysis import contracts
+from repro.analysis.contracts import Violation
+
+__all__ = ["contracts", "Violation"]

@@ -1,0 +1,350 @@
+"""Offline kernel-contract auditor: sweep everything the choosers can emit.
+
+``analysis.contracts`` holds the predicates; this module drives them over
+the whole reachable configuration space and emits a machine-readable
+report, so a contract regression (a chooser emitting an unlaunchable
+block, a stale tuning-table commit, a backward-policy drift) is caught by
+CI instead of by a Mosaic compile error -- or worse, a silently padded
+kernel -- at dispatch time.
+
+Sections (one report entry each):
+
+* ``candidate-grids`` -- every (kind, shape, dtype, spec) candidate the
+  perf model enumerates passes :func:`contracts.check_kernel_config`.
+* ``resolved-configs`` -- the analytic picks AND ``ops.resolve_params``
+  outputs (the exact trace-time resolution, including pinned-split and
+  "never" arms) are contract-clean, and the zero-padded operand shapes
+  they imply satisfy the grid-divisibility contract.
+* ``tuning-table`` -- every committed TuningTable record re-checks under
+  the table's *fitted* spec (``TuningTable.fitted_spec``: explore-budget
+  winners are legal exactly when calibration widened ``vmem_usable``),
+  names a registered executor, and sits in the bucket its shape hashes to.
+* ``policies`` -- ``tsmm.backward_policy`` honors the VJP re-dispatch
+  invariants for every reachable GemmPolicy field combo, and every
+  registered executor declares a well-formed reduce contract.
+* ``bench-dispatch`` -- the committed ``BENCH_*.json`` dispatch-sanity
+  arms observed only registered executors, matched their expectations,
+  and scatter arms ran on a divisible output axis.
+
+CLI::
+
+    python -m repro.analysis.audit [--strict] [--json PATH]
+                                   [--bench PATH] [--table PATH]
+
+``--strict`` exits 1 on any violation (the CI mode). ``run_audit`` is the
+API the tests drive; it never raises on violations, it reports them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax.numpy as jnp
+
+from repro.analysis import contracts
+from repro.core import autotune, perf_model, tsmm
+from repro.kernels import ops
+
+__all__ = [
+    "AUDIT_SCHEMA",
+    "SWEEP_SHAPES",
+    "audit_candidate_grids",
+    "audit_resolved_configs",
+    "audit_tuning_table",
+    "audit_policies",
+    "audit_bench",
+    "run_audit",
+    "main",
+]
+
+AUDIT_SCHEMA = "repro-analysis-audit/1"
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+DEFAULT_BENCH = _REPO_ROOT / "benchmarks" / "BENCH_baseline.json"
+
+# Paper shapes plus deliberately awkward ones (odd dims, non-lane/sublane
+# multiples) -- the configurations most likely to expose clamp/quantization
+# drift between the model and the resolver.
+SWEEP_SHAPES: dict[str, tuple[tuple[int, int, int], ...]] = {
+    "tsm2r": ((2048, 512, 8), (4096, 4096, 16), (20480, 20480, 16),
+              (4100, 130, 3), (2048, 512, 130), (1000, 100, 2)),
+    "tsm2l": ((8192, 16, 16), (100000, 8, 8), (65536, 130, 4),
+              (10001, 3, 5)),
+    "tsmt": ((4096, 64, 8), (65536, 16, 16), (8200, 130, 8),
+             (4096, 64, 512), (100000, 2, 2)),
+}
+SWEEP_DTYPES = (jnp.bfloat16, jnp.float32)
+SWEEP_SPECS = (perf_model.V5E, perf_model.V5P)
+# Policy split-knob arms the resolver audit exercises ("auto", a pinned S,
+# and the sequential pin).
+SWEEP_SPLITS = ("auto", 2, "never")
+
+# The bench mesh arms run on the CI host topology (2 virtual devices); the
+# scatter arms' output axis must tile over that many shards to exist.
+BENCH_MESH_SHARDS = 2
+
+
+def _candidate_dicts(kind, m, d1, d2, spec, dtype):
+    if kind == "tsm2r":
+        return [{"block_m": bm, "block_k": bk, "splits": s}
+                for bm, bk, s in perf_model.tsm2r_candidates(m, d1, d2, spec,
+                                                            dtype)]
+    if kind == "tsm2l":
+        return [{"block_m": bm}
+                for bm in perf_model.tsm2l_candidates(m, d1, d2, spec, dtype)]
+    return [{"block_m": bm, "block_a": ba, "splits": s}
+            for bm, ba, s in perf_model.tsmt_candidates(m, d1, d2, spec,
+                                                        dtype)]
+
+
+def _chooser_pick(kind, m, d1, d2, spec, dtype):
+    if kind == "tsm2r":
+        bm, bk, s = perf_model.choose_params_tsm2r(m, d1, d2, spec, dtype)
+        return {"block_m": bm, "block_k": bk, "splits": s}
+    if kind == "tsm2l":
+        return {"block_m": perf_model.choose_params_tsm2l(m, d1, d2, spec,
+                                                          dtype)}
+    bm, ba, s = perf_model.choose_params_tsmt(m, d1, d2, spec, dtype)
+    return {"block_m": bm, "block_a": ba, "splits": s}
+
+
+def _padded_shape(kind, shape, params):
+    """The operand shape ``ops``'s zero-padding produces for ``params`` --
+    re-derived here so the audit proves the grid contract holds for what
+    actually launches (see ``_tsm2r_impl``/``_tsmt_impl`` padding)."""
+    m, d1, d2 = shape
+    p = dict(params)
+    s = p.get("splits", 1)
+    if kind == "tsm2r":
+        return (contracts.ceil_mult(m, p["block_m"]),
+                contracts.ceil_mult(d1, s * p["block_k"]), d2)
+    if kind == "tsm2l":
+        return (contracts.ceil_mult(m, p["block_m"]), d1, d2)
+    return (contracts.ceil_mult(m, s * p["block_m"]),
+            contracts.ceil_mult(d1, p["block_a"]), d2)
+
+
+def audit_candidate_grids(shapes=None, dtypes=SWEEP_DTYPES,
+                          specs=SWEEP_SPECS):
+    """Every enumerated candidate must be contract-clean (the enumerators
+    filter with ``contracts.feasible``, so any violation here means the
+    filter and the checker have drifted apart)."""
+    shapes = shapes or SWEEP_SHAPES
+    checked, out = 0, []
+    for kind, kshapes in shapes.items():
+        for shape in kshapes:
+            for dtype in dtypes:
+                for spec in specs:
+                    for params in _candidate_dicts(kind, *shape, spec, dtype):
+                        checked += 1
+                        out.extend(v for v in contracts.check_kernel_config(
+                            kind, shape, params, dtype, spec)
+                            if v.rule != "accumulator-limit")
+    return checked, out
+
+
+def audit_resolved_configs(shapes=None, dtypes=SWEEP_DTYPES,
+                           specs=SWEEP_SPECS, splits=SWEEP_SPLITS):
+    """Analytic picks and ``ops.resolve_params`` outputs (every policy
+    split arm) are launchable, and their padded shapes grid exactly."""
+    shapes = shapes or SWEEP_SHAPES
+    checked, out = 0, []
+    for kind, kshapes in shapes.items():
+        for shape in kshapes:
+            for dtype in dtypes:
+                for spec in specs:
+                    configs = [_chooser_pick(kind, *shape, spec, dtype)]
+                    for split in splits:
+                        if kind == "tsm2l" and split != "auto":
+                            continue  # tsm2l has no split dimension
+                        pol = tsmm.GemmPolicy(spec=spec, split=split)
+                        configs.append(ops.resolve_params(
+                            kind, *shape, dtype, pol, interpret=True))
+                    for params in configs:
+                        checked += 1
+                        out.extend(v for v in contracts.check_kernel_config(
+                            kind, shape, params, dtype, spec,
+                            max_b=tsmm.GemmPolicy().max_skinny_t)
+                            if v.rule != "accumulator-limit")
+                        out.extend(contracts.check_grid(
+                            kind, _padded_shape(kind, shape, params), params))
+    return checked, out
+
+
+def audit_tuning_table(table: autotune.TuningTable):
+    """Every committed record re-checks under the table's fitted spec."""
+    known = tuple(tsmm.executors())
+    checked, out = 0, []
+    for r in table.records:
+        checked += 1
+        try:
+            spec = perf_model.get_spec(r.spec_name)
+        except ValueError:
+            out.append(contracts.Violation(
+                "unknown-spec", r.key,
+                f"record names unknown TPU spec {r.spec_name!r}"))
+            continue
+        eff = table.fitted_spec(r.kind, *r.shape, dtype=r.dtype, spec=spec)
+        out.extend(contracts.check_tuning_record(
+            r.kind, r.shape, r.params_dict, r.dtype, eff,
+            executor=r.executor, known_executors=known))
+        want_bucket = autotune.bucket_shape(*r.shape)
+        if tuple(r.bucket) != want_bucket:
+            out.append(contracts.Violation(
+                "bucket-mismatch", r.key,
+                f"record bucket {tuple(r.bucket)} != bucket_shape{r.shape}"
+                f"={want_bucket}: lookups will never hit this entry"))
+    return checked, out
+
+
+# Reachable field combos for the backward-policy sweep: every mode class
+# (auto, the dense pin, a forward-kind force), every reduce mode, every
+# split-knob class, and executor pinned/unpinned.
+_POLICY_MODES = ("auto", "dense", "tsm2r", "tsm2l")
+_POLICY_SPLITS = ("auto", "never", 4)
+_POLICY_EXECUTORS = (None, "pallas-tpu", "shard_map", "shard_map-scatter")
+
+
+def audit_policies():
+    """backward_policy invariants over the reachable GemmPolicy combos,
+    plus well-formedness of every registered executor's reduce contract."""
+    checked, out = 0, []
+    for mode in _POLICY_MODES:
+        for reduce_ in ("psum", "psum_scatter", "none"):
+            for split in _POLICY_SPLITS:
+                for executor in _POLICY_EXECUTORS:
+                    checked += 1
+                    p = tsmm.GemmPolicy(mode=mode, reduce=reduce_,
+                                        split=split, executor=executor)
+                    out.extend(contracts.check_backward_policy(
+                        p, tsmm.backward_policy(p)))
+    for name in tsmm.executors():
+        checked += 1
+        declared = tsmm.executor_reduce_contract(name)
+        bad = [m for m in declared if m not in ("psum", "psum_scatter",
+                                                "none")]
+        if bad or not declared:
+            out.append(contracts.Violation(
+                "executor-contract-modes", f"executor {name!r}",
+                f"declared reduce contract {declared!r} is "
+                f"{'empty' if not declared else f'invalid: {bad}'}"))
+    return checked, out
+
+
+def audit_bench(bench: dict):
+    """Dispatch-sanity arms of a committed BENCH_*.json report."""
+    known = tuple(tsmm.executors())
+    checked, out = 0, []
+    for arm in bench.get("dispatch_sanity", ()):
+        checked += 1
+        name = arm.get("arm", "?")
+        subject = f"dispatch_sanity arm {name!r}"
+        observed = arm.get("observed", [])
+        observed = [observed] if isinstance(observed, str) else list(observed)
+        expected = arm.get("expected", [])
+        expected = [expected] if isinstance(expected, str) else list(expected)
+        if not arm.get("ok", False):
+            out.append(contracts.Violation(
+                "bench-dispatch-failed", subject,
+                f"arm recorded ok={arm.get('ok')!r}: the committed baseline "
+                "contains a failed dispatch assertion"))
+        if observed != expected:
+            out.append(contracts.Violation(
+                "bench-dispatch-mismatch", subject,
+                f"observed executors {observed} != expected {expected}"))
+        for ex in observed:
+            if ex not in known:
+                out.append(contracts.Violation(
+                    "unknown-executor", subject,
+                    f"observed executor {ex!r} is not registered "
+                    f"(known: {sorted(known)})"))
+        if "shard_map-scatter" in observed:
+            _, d1, _ = arm.get("shape", (0, 0, 0))
+            for v in contracts.check_scatter(d1, BENCH_MESH_SHARDS):
+                out.append(contracts.Violation(v.rule, subject, v.detail))
+    return checked, out
+
+
+def _load_table(table_path, bench):
+    if table_path is not None:
+        return autotune.TuningTable.load(table_path)
+    embedded = (bench or {}).get("autotune", {}).get("table")
+    if embedded:
+        return autotune.TuningTable.from_json(embedded)
+    return None
+
+
+def run_audit(*, bench_path=None, table_path=None, shapes=None) -> dict:
+    """Run every section; return the machine-readable report."""
+    bench = None
+    path = bench_path if bench_path is not None else (
+        DEFAULT_BENCH if DEFAULT_BENCH.exists() else None)
+    if path is not None:
+        with open(path) as f:
+            bench = json.load(f)
+    table = _load_table(table_path, bench)
+
+    sections: dict[str, tuple[int, list]] = {
+        "candidate-grids": audit_candidate_grids(shapes=shapes),
+        "resolved-configs": audit_resolved_configs(shapes=shapes),
+        "policies": audit_policies(),
+    }
+    if table is not None:
+        sections["tuning-table"] = audit_tuning_table(table)
+    if bench is not None:
+        sections["bench-dispatch"] = audit_bench(bench)
+
+    report = {
+        "schema": AUDIT_SCHEMA,
+        "bench": str(path) if path is not None else None,
+        "sections": {
+            name: {"checked": checked,
+                   "violations": [v.to_json() for v in vios]}
+            for name, (checked, vios) in sections.items()
+        },
+    }
+    report["checked"] = sum(c for c, _ in sections.values())
+    report["violations"] = sum(len(v) for _, v in sections.values())
+    report["ok"] = report["violations"] == 0
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="Audit kernel-launch contracts over the full "
+                    "configuration space (see repro.analysis.contracts).")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any violation (CI mode)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--bench", metavar="PATH", default=None,
+                    help="BENCH_*.json to audit (default: the committed "
+                         "benchmarks/BENCH_baseline.json)")
+    ap.add_argument("--table", metavar="PATH", default=None,
+                    help="tuning-table JSON to audit (default: the table "
+                         "embedded in the bench report)")
+    args = ap.parse_args(argv)
+
+    report = run_audit(bench_path=args.bench, table_path=args.table)
+    for name, sec in report["sections"].items():
+        status = "ok" if not sec["violations"] else (
+            f"{len(sec['violations'])} violation(s)")
+        print(f"{name}: {sec['checked']} checked, {status}")
+        for v in sec["violations"]:
+            print(f"  [{v['rule']}] {v['subject']}: {v['detail']}")
+    print(f"repro.analysis.audit: {report['checked']} checked, "
+          f"{report['violations']} violation(s)"
+          + (" -- clean" if report["ok"] else ""))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"report written to {args.json}")
+    return 1 if (args.strict and not report["ok"]) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,358 @@
+"""AST-based repo invariant linter: the boundaries PRs 1-5 established by
+convention, now enforced (``python -m repro.analysis.lint``).
+
+Rules (stable ids; each can be waived per line with a pragma comment
+``# repro: allow-<rule-name> (reason)`` on the offending line or the line
+directly above -- the reason is mandatory, waivers are grep-able):
+
+* **RA001 jax-src-import** -- ``jax._src`` is private API and may be
+  imported ONLY by ``kernels/compat.py``, the version-shim module whose
+  whole job is quarantining such dependencies.
+* **RA002 raw-param-matmul** -- inside ``models/``, ``optim/`` and
+  ``serve/``, matmuls over *parameter-shaped* operands (``jnp.dot`` /
+  ``jnp.einsum`` / ``jnp.matmul`` / ``lax.dot_general`` / the ``@``
+  operator where an operand looks like a weight: named ``w``/``w_*``/
+  ``*_w``/``wq``-style, or indexed out of a params dict by a weight-ish
+  key) must route through ``repro.core.tsmm`` so the policy scope, the
+  classifier and the kernels see them. Attention-score/state einsums over
+  activations are out of scope by construction (their operands are not
+  parameter-shaped).
+* **RA003 env-read** -- ``os.environ`` / ``os.getenv`` reads are allowed
+  only in the default-policy constructor (``core/tsmm.py::
+  _policy_from_env``) and under ``launch/`` (process launchers run before
+  tracing). Anywhere else an env read is trace-time hidden state that
+  bypasses the GemmPolicy scoping this repo exists to enforce.
+* **RA004 executor-contract** -- every ``register_executor`` call in the
+  package must declare its reduce contract (``reduce=``); the implicit
+  all-modes default is for out-of-tree back-compat only.
+
+Import discipline: stdlib only (ast + pathlib), so the linter runs in a
+bare CI interpreter with no jax present.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+
+__all__ = ["LintError", "lint_source", "lint_file", "lint_paths", "main",
+           "RULES"]
+
+RULES = {
+    "jax-src-import": "jax._src imported outside kernels/compat.py",
+    "raw-param-matmul": "raw matmul on parameter-shaped operands in "
+                        "models//optim//serve/ (route through tsmm)",
+    "env-read": "os.environ/getenv read outside the default-policy "
+                "constructor or launch/",
+    "executor-contract": "register_executor without an explicit reduce= "
+                         "contract declaration",
+}
+
+# Directories (relative to the package root) where RA002 applies: the
+# layers whose matmuls carry model parameters and must be policy-routed.
+_PARAM_MATMUL_DIRS = ("models", "optim", "serve")
+
+# RA003 allowlist: (path suffix, enclosing function) pairs, plus whole dirs.
+_ENV_READ_FUNC_ALLOW = (("core/tsmm.py", "_policy_from_env"),)
+_ENV_READ_DIR_ALLOW = ("launch",)
+
+# A name is parameter-shaped when it matches the repo's weight-naming
+# convention: bare "w", "w"+head-letters (wq/wk/wv/wo/wuk/wukv...), w_*/
+# *_w, weight(s), or a params "table". Deliberately name-based -- the
+# linter has no type information; false positives are waived with a
+# documented pragma, which is the point (the waiver records WHY the site
+# is exempt).
+_PARAM_NAME = re.compile(r"^(w|w[a-z]{1,3}|w_\w+|\w+_w|weights?|table)$")
+_PARAM_KEY = re.compile(r"^(w|w[a-z]{1,3}|w_\w+|\w+_w|weights?|table|embed\w*)$")
+_PARAM_CONTAINERS = ("params", "param", "weights", "ew")
+
+_PRAGMA = re.compile(r"#\s*repro:\s*allow-([a-z0-9-]+)\s*(\(.*\))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintError:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _waivers(source: str, tree: ast.AST) -> dict[int, set[str]]:
+    """line number -> rule names waived there.
+
+    A pragma on line L waives L itself (trailing-comment form) and the
+    whole *statement* that starts at the next non-comment line (leading-
+    comment form) -- multi-line calls and continuation comments included,
+    so a waiver above ``g = maybe_wsc(jnp.einsum(...\\n...))`` covers the
+    einsum on the wrapped line.
+    """
+    lines = source.splitlines()
+    # statement start line -> largest end line of a statement starting there
+    stmt_end: dict[int, int] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.stmt):
+            end = node.end_lineno or node.lineno
+            stmt_end[node.lineno] = max(stmt_end.get(node.lineno, 0), end)
+    out: dict[int, set[str]] = {}
+    for i, text in enumerate(lines, start=1):
+        m = _PRAGMA.search(text)
+        if not m:
+            continue
+        rule = m.group(1)
+        out.setdefault(i, set()).add(rule)
+        # find the first non-comment, non-blank line below the pragma
+        j = i + 1
+        while j <= len(lines) and (not lines[j - 1].strip()
+                                   or lines[j - 1].lstrip().startswith("#")):
+            j += 1
+        for ln in range(j, stmt_end.get(j, j) + 1):
+            out.setdefault(ln, set()).add(rule)
+    return out
+
+
+def _unwrap(node: ast.AST) -> ast.AST:
+    """Strip .T/.astype(...)/.reshape(...)/slicing wrappers so the
+    underlying operand expression is what gets name-matched."""
+    while True:
+        if isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Attribute):
+            if node.attr in ("T", "astype", "reshape", "mT", "transpose",
+                             "swapaxes"):
+                node = node.value
+            else:
+                break
+        elif isinstance(node, ast.Subscript):
+            # peel positional slicing (x[..., :n]) but KEEP string-keyed
+            # subscripts -- those are the params["w_*"] accesses the
+            # heuristic matches directly.
+            if _string_key(node) is not None:
+                break
+            node = node.value
+        else:
+            break
+    return node
+
+
+def _string_key(node: ast.Subscript) -> str | None:
+    s = node.slice
+    if isinstance(s, ast.Constant) and isinstance(s.value, str):
+        return s.value
+    return None
+
+
+def _is_param_shaped(node: ast.AST) -> bool:
+    node = _unwrap(node)
+    if isinstance(node, ast.Name):
+        return bool(_PARAM_NAME.match(node.id))
+    if isinstance(node, ast.Subscript):
+        key = _string_key(node)
+        if key is not None and _PARAM_KEY.match(key):
+            return True
+        base = _unwrap(node.value)
+        if (key is not None and isinstance(base, ast.Name)
+                and base.id in _PARAM_CONTAINERS):
+            return True
+    return False
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a call target ('jnp.einsum', ...)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+_MATMUL_CALLS = {
+    "jnp.dot", "jnp.matmul", "jnp.einsum", "jnp.tensordot",
+    "np.dot", "numpy.dot",
+    "lax.dot_general", "lax.dot", "jax.lax.dot_general", "jax.lax.dot",
+    "jax.numpy.dot", "jax.numpy.matmul", "jax.numpy.einsum",
+}
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, rel: str, waivers: dict[int, set[str]]):
+        self.path = path
+        self.rel = rel  # path relative to the package root, '/'-separated
+        self.waivers = waivers
+        self.errors: list[LintError] = []
+        self._func_stack: list[str] = []
+        self.check_param_matmul = any(
+            f"/{d}/" in f"/{rel}" for d in _PARAM_MATMUL_DIRS)
+        self.env_read_allowed_file = any(
+            f"/{d}/" in f"/{rel}" for d in _ENV_READ_DIR_ALLOW)
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if rule in self.waivers.get(line, ()):
+            return
+        self.errors.append(LintError(rule, self.path, line, message))
+
+    def visit_FunctionDef(self, node):
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- RA001: jax._src confinement ----------------------------------------
+
+    def _check_import(self, node, module: str) -> None:
+        if module == "jax._src" or module.startswith("jax._src."):
+            if not self.rel.endswith("kernels/compat.py"):
+                self._emit("jax-src-import", node,
+                           f"import of private API {module!r} outside "
+                           "kernels/compat.py")
+
+    def visit_Import(self, node):
+        for alias in node.names:
+            self._check_import(node, alias.name)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node):
+        if node.module and node.level == 0:
+            self._check_import(node, node.module)
+        self.generic_visit(node)
+
+    # -- RA002 + RA003 + RA004: calls ---------------------------------------
+
+    def visit_Call(self, node):
+        name = _dotted(node.func)
+
+        if self.check_param_matmul and name in _MATMUL_CALLS:
+            operands = [a for a in node.args
+                        if not (isinstance(a, ast.Constant)
+                                and isinstance(a.value, str))]
+            hits = [a for a in operands if _is_param_shaped(a)]
+            if hits:
+                self._emit(
+                    "raw-param-matmul", node,
+                    f"{name} over parameter-shaped operand "
+                    f"{ast.unparse(hits[0])!r}: route through "
+                    "repro.core.tsmm (or waive with a documented pragma)")
+
+        if name in ("os.getenv", "getenv"):
+            self._check_env_read(node)
+        if name.endswith("environ.get") and name.startswith("os"):
+            self._check_env_read(node)
+
+        if name.split(".")[-1] == "register_executor":
+            kw = {k.arg for k in node.keywords}
+            if "reduce" not in kw:
+                self._emit(
+                    "executor-contract", node,
+                    "register_executor without reduce=: every in-repo "
+                    "executor must declare which GemmPolicy.reduce modes "
+                    "it implements")
+
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node):
+        # the `@` operator form of RA002
+        if self.check_param_matmul and isinstance(node.op, ast.MatMult):
+            hits = [a for a in (node.left, node.right)
+                    if _is_param_shaped(a)]
+            if hits:
+                self._emit(
+                    "raw-param-matmul", node,
+                    f"@ over parameter-shaped operand "
+                    f"{ast.unparse(hits[0])!r}: route through "
+                    "repro.core.tsmm (or waive with a documented pragma)")
+        self.generic_visit(node)
+
+    def _env_read_allowed(self) -> bool:
+        if self.env_read_allowed_file:
+            return True
+        return any(self.rel.endswith(suffix) and fn in self._func_stack
+                   for suffix, fn in _ENV_READ_FUNC_ALLOW)
+
+    def _check_env_read(self, node) -> None:
+        if not self._env_read_allowed():
+            self._emit(
+                "env-read", node,
+                "os.environ read outside the default-policy constructor "
+                "(core/tsmm.py::_policy_from_env) or launch/: env state "
+                "must flow through GemmPolicy, not be read at trace time")
+
+    def visit_Subscript(self, node):
+        # os.environ["X"] reads (writes are assignments -- visit context).
+        if (_dotted(node.value) == "os.environ"
+                and isinstance(node.ctx, ast.Load)):
+            self._check_env_read(node)
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node):
+        # bare `os.environ` passed around (e.g. dict(os.environ)) -- only
+        # flag Load contexts that are not the subscript/call cases above
+        # (those recurse here, so keep this to the exact dotted match).
+        self.generic_visit(node)
+
+
+def lint_source(source: str, path: str, rel: str | None = None
+                ) -> list[LintError]:
+    """Lint one file's source text. ``rel`` is the path relative to the
+    scanned package root ('/'-separated); defaults to ``path``."""
+    rel = (rel if rel is not None else path).replace("\\", "/")
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [LintError("syntax-error", path, e.lineno or 0, str(e.msg))]
+    v = _Visitor(path, rel, _waivers(source, tree))
+    v.visit(tree)
+    return sorted(v.errors, key=lambda e: (e.path, e.line, e.rule))
+
+
+def lint_file(path) -> list[LintError]:
+    p = Path(path)
+    return lint_source(p.read_text(), str(p), None)
+
+
+def _package_root(root) -> Path:
+    return Path(root) if root is not None else (
+        Path(__file__).resolve().parents[1])
+
+
+def lint_paths(root=None) -> list[LintError]:
+    """Lint every ``*.py`` under ``root`` (default: the ``repro`` package
+    this module is installed in). ``rel`` paths are computed against
+    ``root`` so the directory-scoped rules fire correctly."""
+    rootp = _package_root(root)
+    errors: list[LintError] = []
+    for p in sorted(rootp.rglob("*.py")):
+        rel = p.relative_to(rootp).as_posix()
+        errors.extend(lint_source(p.read_text(), str(p), rel))
+    return errors
+
+
+def main(argv=None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    roots = args or [None]
+    errors: list[LintError] = []
+    for r in roots:
+        errors.extend(lint_paths(r))
+    for e in errors:
+        print(e)
+    n = len(errors)
+    print(f"repro.analysis.lint: {n} violation(s)"
+          + ("" if n else " -- clean"))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -674,7 +674,8 @@ DEFAULT_CALIBRATION_SHAPES = (
 
 def calibrate(shapes=DEFAULT_CALIBRATION_SHAPES, *, spec=None,
               dtype=jnp.float32, policy=None, reps: int = 3,
-              warmup: int = 1, explore_vmem: float = 1.25) -> CalibrationResult:
+              warmup: int = 1, explore_vmem: float = 1.25,
+              base_table: TuningTable | None = None) -> CalibrationResult:
     """Measure + fit in one step: the ``calibrate(spec)`` entry point.
 
     Autotunes ``shapes`` under ``policy`` (or the current scope), then fits
@@ -686,6 +687,16 @@ def calibrate(shapes=DEFAULT_CALIBRATION_SHAPES, *, spec=None,
     off-table shapes in a measured bucket (``kernels/ops`` prefers the
     bucket-local fit; the global fit is the fallback cell). Returns the
     globally fitted spec, before/after error, and the table.
+
+    ``base_table`` makes a *partial re-calibration* incremental: the
+    returned table carries the base records merged under the fresh ones
+    (same-bucket records are replaced by the new measurement), while the
+    ``fits`` are ONLY this run's -- stale per-bucket ``SpecFit`` cells from
+    the base age out rather than silently steering the analytic chooser
+    with constants an older run (other machine load, other jax version,
+    other interpret/hardware mode) measured. Fitted constants must come
+    from one coherent measurement pass; records are per-bucket facts and
+    merge safely.
     """
     from repro.core import tsmm
 
@@ -709,4 +720,9 @@ def calibrate(shapes=DEFAULT_CALIBRATION_SHAPES, *, spec=None,
                             local.spec.step_overhead,
                             local.spec.dma_latency,
                             local.spec.vmem_usable))
+    if base_table is not None:
+        # base fits intentionally dropped (see docstring); records merge
+        # with this run's measurements winning shared buckets.
+        table = TuningTable.from_records(
+            (*base_table.records, *table.records))
     return dataclasses.replace(fitted, table=table.with_fits(fits))

@@ -31,6 +31,8 @@ from typing import Literal
 
 import jax.numpy as jnp
 
+from repro.analysis import contracts
+
 Bound = Literal["memory", "compute", "latency"]
 
 
@@ -170,14 +172,13 @@ def split_partials_bytes(splits: int, rows: int, cols: int) -> int:
 
 
 def tsm2r_vmem_usage(bm: int, bk: int, n: int, dtype) -> int:
-    """VMEM bytes for one grid cell, double-buffered in-streams + acc + out."""
-    b = bytes_per_elem(dtype)
-    n_pad = _roundup(n, 128)
-    a_win = 2 * bm * bk * b          # double-buffered A window
-    b_win = 2 * bk * n_pad * b       # double-buffered B window
-    acc = bm * n_pad * 4             # f32 accumulator scratch
-    out = bm * n_pad * b             # output window
-    return a_win + b_win + acc + out
+    """VMEM bytes for one grid cell, double-buffered in-streams + acc + out.
+
+    Alias of ``analysis.contracts.tsm2r_footprint`` -- the footprint math
+    lives in the contract layer so the model, the dispatcher and the
+    auditor can never disagree on it (likewise the two aliases below).
+    """
+    return contracts.tsm2r_footprint(bm, bk, n, dtype)
 
 
 def tsm2r_model_time(m: int, k: int, n: int, bm: int, bk: int,
@@ -215,20 +216,13 @@ def tsm2r_model_time(m: int, k: int, n: int, bm: int, bk: int,
 
 
 def tsm2l_vmem_usage(bm: int, k: int, n: int, dtype) -> int:
-    """VMEM bytes for one TSM2L grid cell: double-buffered A window, the
-    whole (k, n) B operand resident, f32 accumulator + output window."""
-    b = bytes_per_elem(dtype)
-    return (2 * bm * _roundup(k, 128) * b
-            + _roundup(k, 8) * _roundup(n, 128) * b
-            + bm * _roundup(n, 128) * (4 + b))
+    """VMEM bytes for one TSM2L grid cell (contract-layer alias)."""
+    return contracts.tsm2l_footprint(bm, k, n, dtype)
 
 
 def tsmt_vmem_usage(bm: int, ba: int, bdim: int, dtype) -> int:
-    """VMEM bytes for one TSMT grid cell: double-buffered X and Y windows
-    plus the unblocked (ba, bdim) f32 accumulator."""
-    b = bytes_per_elem(dtype)
-    return (2 * bm * ba * b + 2 * bm * _roundup(bdim, 128) * b
-            + ba * _roundup(bdim, 128) * 4)
+    """VMEM bytes for one TSMT grid cell (contract-layer alias)."""
+    return contracts.tsmt_footprint(bm, ba, bdim, dtype)
 
 
 def tsm2l_model_time(m: int, k: int, n: int, bm: int,
@@ -314,27 +308,28 @@ def tsm2r_candidates(m: int, k: int, n: int, spec: TPUSpec = V5E,
 
     This is the grid both the analytic argmin (``choose_params_tsm2r``) and
     the measured-time autotuner (``core.autotune``) search over, so the two
-    halves of Algorithm 5 score exactly the same parameter space. Per-cell
-    VMEM usage is split-invariant (same windows, same accumulator), so the
-    budget filter ignores S; S > 1 requires at least one full (bk) block
-    per reduction slice.
+    halves of Algorithm 5 score exactly the same parameter space. The
+    feasibility filter IS ``analysis.contracts.feasible`` (VMEM budget,
+    quantized-dim caps, split whole-slice feasibility -- per-cell VMEM is
+    split-invariant), so the model can never score a block the kernel
+    contracts reject.
     """
-    budget = spec.vmem_bytes * spec.vmem_usable
     return [(bm, bk, s)
-            for bm in _BM_CANDIDATES if bm <= _roundup(m, spec.sublane)
-            for bk in _BK_CANDIDATES if bk <= _roundup(k, spec.lane)
-            and tsm2r_vmem_usage(bm, bk, n, dtype) <= budget
+            for bm in _BM_CANDIDATES
+            for bk in _BK_CANDIDATES
             for s in SPLIT_CANDIDATES
-            if s == 1 or s * bk <= _roundup(k, spec.lane)]
+            if contracts.feasible(
+                "tsm2r", (m, k, n),
+                {"block_m": bm, "block_k": bk, "splits": s}, dtype, spec)]
 
 
 def tsm2l_candidates(m: int, k: int, n: int, spec: TPUSpec = V5E,
                      dtype=jnp.bfloat16) -> list[int]:
-    """All VMEM-feasible block_m candidates for TSM2L."""
-    budget = spec.vmem_bytes * spec.vmem_usable
+    """All VMEM-feasible block_m candidates for TSM2L (filter:
+    ``analysis.contracts.feasible``)."""
     return [bm for bm in _BM_L_CANDIDATES
-            if bm <= _roundup(m, spec.sublane)
-            and tsm2l_vmem_usage(bm, k, n, dtype) <= budget]
+            if contracts.feasible("tsm2l", (m, k, n), {"block_m": bm},
+                                  dtype, spec)]
 
 
 def tsmt_candidates(m: int, a: int, bdim: int, spec: TPUSpec = V5E,
@@ -342,15 +337,16 @@ def tsmt_candidates(m: int, a: int, bdim: int, spec: TPUSpec = V5E,
     """All VMEM-feasible (block_m, block_a, splits) candidates for TSMT.
 
     m is the reduction here, so S slices the m sweep; S > 1 requires at
-    least one full (bm) block per slice.
+    least one full (bm) block per slice. Filter:
+    ``analysis.contracts.feasible``.
     """
-    budget = spec.vmem_bytes * spec.vmem_usable
     return [(bm, ba, s)
-            for bm in _BM_CANDIDATES if bm <= _roundup(m, spec.sublane)
-            for ba in _BA_CANDIDATES if ba <= _roundup(a, spec.lane)
-            and tsmt_vmem_usage(bm, ba, bdim, dtype) <= budget
+            for bm in _BM_CANDIDATES
+            for ba in _BA_CANDIDATES
             for s in SPLIT_CANDIDATES
-            if s == 1 or s * bm <= _roundup(m, spec.sublane)]
+            if contracts.feasible(
+                "tsmt", (m, a, bdim),
+                {"block_m": bm, "block_a": ba, "splits": s}, dtype, spec)]
 
 
 def choose_params_tsm2r(m: int, k: int, n: int, spec: TPUSpec = V5E,

@@ -103,6 +103,7 @@ __all__ = [
     "register_executor",
     "unregister_executor",
     "executors",
+    "executor_reduce_contract",
     "record_dispatches",
     "DispatchEvent",
     "enabled",
@@ -263,6 +264,14 @@ class GemmPolicy:
     tuning_table: object | None = None
     reduce: str = "psum"
     split: str | int = "auto"
+    # Trace-time contract assertion: when set, kernels/ops re-checks every
+    # resolved launch configuration against analysis.contracts (the same
+    # predicates the perf model's candidate filter and the offline auditor
+    # use) and raises ValueError on a violation instead of launching.
+    # Preserved by backward_policy (it is scope-wide intent, like a dense
+    # pin); off by default -- the predicates are cheap but the mode exists
+    # for CI, tests and debugging, not for the hot path.
+    verify_contracts: bool = False
 
     def __post_init__(self):
         s = self.split
@@ -476,25 +485,57 @@ def record_dispatches():
 # under GSPMD).
 
 _EXECUTORS: dict = {}
+# name -> the tuple of GemmPolicy.reduce modes the executor implements for
+# the "mmt" entry (its *reduce contract*). Selection refuses to hand a
+# pinned executor an mmt dispatch whose scope asks a reduce mode outside
+# the contract -- the caller's layout request must fail loudly, not be
+# silently rewritten (see _select_executor).
+_EXECUTOR_CONTRACTS: dict = {}
 
 
-def register_executor(name: str, fn, *, overwrite: bool = False):
-    """Register a backend. Returns ``fn`` (usable as a decorator factory)."""
+def register_executor(name: str, fn, *, reduce: tuple[str, ...] | None = None,
+                      overwrite: bool = False):
+    """Register a backend. Returns ``fn`` (usable as a decorator factory).
+
+    ``reduce`` declares the executor's reduce contract: the
+    ``GemmPolicy.reduce`` modes it implements for ``tsmm_t`` dispatch
+    (e.g. ``("psum", "none")``). ``None`` -- the back-compat default --
+    declares all modes, which is right for executors that never touch a
+    collective (dense, single-chip kernels: every reduce mode degenerates
+    to the same single-shard product). New executors in this repo must
+    declare explicitly; ``analysis/lint.py`` rule RA004 enforces it.
+    """
     if name in _EXECUTORS and not overwrite:
         raise ValueError(f"executor {name!r} already registered "
                          "(pass overwrite=True to replace)")
+    if reduce is not None:
+        bad = [r for r in reduce if r not in _REDUCE_MODES]
+        if bad:
+            raise ValueError(
+                f"executor {name!r} declares unknown reduce modes {bad}: "
+                f"valid values are {', '.join(_REDUCE_MODES)}")
     _EXECUTORS[name] = fn
+    _EXECUTOR_CONTRACTS[name] = (tuple(_REDUCE_MODES) if reduce is None
+                                 else tuple(reduce))
     return fn
 
 
 def unregister_executor(name: str) -> None:
     """Remove a registered backend (built-ins included -- caveat emptor)."""
     _EXECUTORS.pop(name, None)
+    _EXECUTOR_CONTRACTS.pop(name, None)
 
 
 def executors() -> dict:
     """Snapshot of the registry (name -> executor)."""
     return dict(_EXECUTORS)
+
+
+def executor_reduce_contract(name: str) -> tuple[str, ...]:
+    """The reduce modes executor ``name`` declared at registration."""
+    if name not in _EXECUTOR_CONTRACTS:
+        raise ValueError(f"executor {name!r} is not registered")
+    return _EXECUTOR_CONTRACTS[name]
 
 
 def _exec_dense_xla(entry, kind, a, b, p):
@@ -671,11 +712,18 @@ def _exec_shard_map_scatter(entry, kind, a, b, p):
     return f(a, b)
 
 
-register_executor("dense-xla", _exec_dense_xla)
-register_executor("pallas-tpu", _exec_pallas)
-register_executor("interpret", _exec_interpret)
-register_executor("shard_map", _exec_shard_map)
-register_executor("shard_map-scatter", _exec_shard_map_scatter)
+# Single-chip executors implement every reduce mode trivially (one shard:
+# psum == psum_scatter == none); the shard_map pair splits the collective
+# modes between them -- that split is exactly what the contracts encode.
+register_executor("dense-xla", _exec_dense_xla,
+                  reduce=("psum", "psum_scatter", "none"))
+register_executor("pallas-tpu", _exec_pallas,
+                  reduce=("psum", "psum_scatter", "none"))
+register_executor("interpret", _exec_interpret,
+                  reduce=("psum", "psum_scatter", "none"))
+register_executor("shard_map", _exec_shard_map, reduce=("psum", "none"))
+register_executor("shard_map-scatter", _exec_shard_map_scatter,
+                  reduce=("psum_scatter",))
 
 
 # ---------------------------------------------------------------------------
@@ -689,6 +737,26 @@ def _select_executor(entry: str, kind: str, m_tall: int, d1: int, d2: int,
             raise ValueError(
                 f"GemmPolicy.executor {p.executor!r} is not registered: "
                 f"known executors are {sorted(_EXECUTORS)}")
+        if entry == "mmt":
+            # Enforce the executor's declared reduce contract at selection
+            # time (mmt only: mm shards never reduce, so every contract is
+            # vacuously satisfied there). A pinned executor must refuse a
+            # collective outside its contract rather than silently change
+            # the output layout the scope's reduce= asked for. The executor
+            # bodies keep their own guards as defense in depth.
+            contract = _EXECUTOR_CONTRACTS.get(p.executor,
+                                               tuple(_REDUCE_MODES))
+            if p.reduce not in contract:
+                compatible = sorted(n for n, c in _EXECUTOR_CONTRACTS.items()
+                                    if p.reduce in c)
+                raise RuntimeError(
+                    f"GemmPolicy pins executor={p.executor!r}, whose "
+                    f"declared reduce contract is {contract}, but the scope "
+                    f"asks reduce={p.reduce!r}: a pinned executor must not "
+                    "silently change the output layout the collective asked "
+                    f"for. Executors declaring {p.reduce!r}: {compatible} "
+                    "-- pin one of those, or drop the pin and let selection "
+                    "match the collective.")
         return p.executor
     if kind == "dense":
         return "dense-xla"

@@ -50,6 +50,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import contracts
 from repro.core import perf_model
 from repro.kernels import compat, ref
 from repro.kernels.reduce import reduce_partials
@@ -61,8 +62,9 @@ from repro.kernels.tsmt import tsmt_pallas, tsmt_pallas_split
 # VMEM tile, so the small output dim is hard-limited (the classifier's
 # max_skinny_t default is derived from the same t2_threshold ~ 481, rounded
 # up to the lane multiple). Past it, ops.tsmt refuses loudly instead of
-# silently compiling a huge accumulator tile.
-TSMT_MAX_B = 512
+# silently compiling a huge accumulator tile. The value is a contract, so
+# it is owned by ``analysis.contracts`` and re-exported here.
+TSMT_MAX_B = contracts.TSMT_MAX_B
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -146,22 +148,20 @@ def _vmem_budget(policy) -> int:
 
 
 # ---------------------------------------------------------------------------
-# TSM2R
+# Parameter resolution (pure; shared by the impls and analysis/audit)
 # ---------------------------------------------------------------------------
 
-def _tsm2r_impl(a, b, block_m, block_k, splits, policy):
-    m, k = a.shape
-    n = b.shape[1]
-    interpret = _resolve_interpret(policy)
+def _resolve_tsm2r(m, k, n, dtype, policy, block_m, block_k, splits,
+                   interpret):
     explicit_bk = block_k is not None
     if splits is None:
         splits = _policy_split(policy)
     if block_m is None or block_k is None or splits is None:
-        tuned = _tuned_params(policy, "tsm2r", (m, k, n), a.dtype, interpret)
+        tuned = _tuned_params(policy, "tsm2r", (m, k, n), dtype, interpret)
         if tuned is None:
             bm, bk, s = perf_model.choose_params_tsm2r(
-                m, k, n, _analytic_spec(policy, "tsm2r", (m, k, n), a.dtype),
-                a.dtype)
+                m, k, n, _analytic_spec(policy, "tsm2r", (m, k, n), dtype),
+                dtype)
         else:
             bm, bk = tuned["block_m"], tuned["block_k"]
             s = tuned.get("splits", 1)
@@ -184,6 +184,110 @@ def _tsm2r_impl(a, b, block_m, block_k, splits, policy):
     # Each reduction slice must own >= one block, or the extra slices are
     # pure zero-padding work: clamp S like the candidate filter does.
     splits = max(1, min(splits, -(-k // block_k)))
+    return {"block_m": block_m, "block_k": block_k, "splits": splits}
+
+
+def _resolve_tsm2l(m, k, n, dtype, policy, block_m, interpret):
+    if block_m is None:
+        tuned = _tuned_params(policy, "tsm2l", (m, k, n), dtype, interpret)
+        block_m = (tuned["block_m"] if tuned is not None else
+                   perf_model.choose_params_tsm2l(
+                       m, k, n, _analytic_spec(policy, "tsm2l", (m, k, n),
+                                               dtype), dtype))
+    block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
+    return {"block_m": block_m}
+
+
+def _resolve_tsmt(m, a_dim, b_dim, dtype, policy, block_m, block_a, splits,
+                  interpret):
+    explicit_bm = block_m is not None
+    if splits is None:
+        splits = _policy_split(policy)
+    if block_m is None or block_a is None or splits is None:
+        tuned = _tuned_params(policy, "tsmt", (m, a_dim, b_dim), dtype,
+                              interpret)
+        if tuned is None:
+            bm, ba, s = perf_model.choose_params_tsmt(
+                m, a_dim, b_dim,
+                _analytic_spec(policy, "tsmt", (m, a_dim, b_dim), dtype),
+                dtype)
+        else:
+            bm, ba = tuned["block_m"], tuned["block_a"]
+            s = tuned.get("splits", 1)
+        block_m = block_m or bm
+        block_a = block_a or ba
+        if splits is None:
+            splits = s
+    block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
+    # block_a is a lane dim of the X window: lane-quantized clamp, matching
+    # the perf model's candidate filter (see _resolve_tsm2r).
+    block_a = min(block_a, _ceil_mult(a_dim, policy.spec.lane))
+    if splits > 1 and not explicit_bm:
+        # honor a pinned S by shrinking the reduction block (m here);
+        # an explicit block_m kwarg wins and S clamps instead.
+        block_m = min(block_m,
+                      _ceil_mult(-(-m // splits), policy.spec.sublane))
+    # m is the reduction here: each slice must own >= one m block.
+    splits = max(1, min(splits, -(-m // block_m)))
+    return {"block_m": block_m, "block_a": block_a, "splits": splits}
+
+
+def resolve_params(kind: str, m: int, d1: int, d2: int, dtype, policy, *,
+                   block_m: int | None = None, block_k: int | None = None,
+                   block_a: int | None = None, splits: int | None = None,
+                   interpret: bool | None = None) -> dict:
+    """Resolve the launch parameters dispatch would use -- without running.
+
+    The exact trace-time logic of the op entry points, factored out so the
+    offline auditor (``analysis/audit.py``) can sweep it: tuned winner from
+    ``policy.tuning_table`` -> analytic chooser (under the table's fitted
+    spec) -> quantized clamps -> split-slice clamp. Explicit kwargs beat
+    both sources, exactly like the per-call kwargs on ``tsm2r``/``tsm2l``/
+    ``tsmt``. ``(d1, d2)`` are ``(k, n)`` for tsm2r/tsm2l, ``(a, b)`` for
+    tsmt.
+
+    When ``policy.verify_contracts`` is set the resolved configuration is
+    asserted against ``analysis.contracts.check_kernel_config`` under the
+    same effective spec the chooser ran with; a violation raises
+    ``ValueError`` (trace time, never on-device).
+    """
+    if interpret is None:
+        interpret = _resolve_interpret(policy)
+    if kind == "tsm2r":
+        params = _resolve_tsm2r(m, d1, d2, dtype, policy, block_m, block_k,
+                                splits, interpret)
+    elif kind == "tsm2l":
+        params = _resolve_tsm2l(m, d1, d2, dtype, policy, block_m, interpret)
+    elif kind == "tsmt":
+        params = _resolve_tsmt(m, d1, d2, dtype, policy, block_m, block_a,
+                               splits, interpret)
+    else:
+        raise ValueError(f"unknown kernel kind {kind!r}: valid kinds are "
+                         f"{', '.join(contracts.KINDS)}")
+    if getattr(policy, "verify_contracts", False):
+        eff_spec = _analytic_spec(policy, kind, (m, d1, d2), dtype)
+        violations = contracts.check_kernel_config(
+            kind, (m, d1, d2), params, dtype, eff_spec,
+            max_b=getattr(policy, "max_skinny_t", None))
+        if violations:
+            raise ValueError(
+                "GemmPolicy.verify_contracts: resolved kernel config "
+                f"breaks {len(violations)} contract(s): "
+                + "; ".join(f"[{v.rule}] {v.detail}" for v in violations))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# TSM2R
+# ---------------------------------------------------------------------------
+
+def _tsm2r_impl(a, b, block_m, block_k, splits, policy):
+    m, k = a.shape
+    n = b.shape[1]
+    interpret = _resolve_interpret(policy)
+    p = resolve_params("tsm2r", m, k, n, a.dtype, policy, block_m=block_m,
+                       block_k=block_k, splits=splits, interpret=interpret)
+    block_m, block_k, splits = p["block_m"], p["block_k"], p["splits"]
     if splits == 1:
         a_p = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
         b_p = _pad_to(b, 0, block_k)
@@ -250,13 +354,8 @@ def _tsm2l_impl(a, b, block_m, policy):
     m, k = a.shape
     n = b.shape[1]
     interpret = _resolve_interpret(policy)
-    if block_m is None:
-        tuned = _tuned_params(policy, "tsm2l", (m, k, n), a.dtype, interpret)
-        block_m = (tuned["block_m"] if tuned is not None else
-                   perf_model.choose_params_tsm2l(
-                       m, k, n, _analytic_spec(policy, "tsm2l", (m, k, n),
-                                               a.dtype), a.dtype))
-    block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
+    block_m = resolve_params("tsm2l", m, k, n, a.dtype, policy,
+                             block_m=block_m, interpret=interpret)["block_m"]
     a_p = _pad_to(a, 0, block_m)
     out = tsm2l_pallas(a_p, b, block_m=block_m, interpret=interpret)
     return out[:m]
@@ -302,35 +401,10 @@ def _tsmt_impl(x, y, block_m, block_a, splits, policy):
     m, a_dim = x.shape
     b_dim = y.shape[1]
     interpret = _resolve_interpret(policy)
-    explicit_bm = block_m is not None
-    if splits is None:
-        splits = _policy_split(policy)
-    if block_m is None or block_a is None or splits is None:
-        tuned = _tuned_params(policy, "tsmt", (m, a_dim, b_dim), x.dtype,
-                              interpret)
-        if tuned is None:
-            bm, ba, s = perf_model.choose_params_tsmt(
-                m, a_dim, b_dim,
-                _analytic_spec(policy, "tsmt", (m, a_dim, b_dim), x.dtype),
-                x.dtype)
-        else:
-            bm, ba = tuned["block_m"], tuned["block_a"]
-            s = tuned.get("splits", 1)
-        block_m = block_m or bm
-        block_a = block_a or ba
-        if splits is None:
-            splits = s
-    block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
-    # block_a is a lane dim of the X window: lane-quantized clamp, matching
-    # the perf model's candidate filter (see _tsm2r_impl).
-    block_a = min(block_a, _ceil_mult(a_dim, policy.spec.lane))
-    if splits > 1 and not explicit_bm:
-        # honor a pinned S by shrinking the reduction block (m here);
-        # an explicit block_m kwarg wins and S clamps instead.
-        block_m = min(block_m,
-                      _ceil_mult(-(-m // splits), policy.spec.sublane))
-    # m is the reduction here: each slice must own >= one m block.
-    splits = max(1, min(splits, -(-m // block_m)))
+    p = resolve_params("tsmt", m, a_dim, b_dim, x.dtype, policy,
+                       block_m=block_m, block_a=block_a, splits=splits,
+                       interpret=interpret)
+    block_m, block_a, splits = p["block_m"], p["block_a"], p["splits"]
     if splits == 1:
         x_p = _pad_to(_pad_to(x, 0, block_m), 1, block_a)
         y_p = _pad_to(y, 0, block_m)
@@ -399,8 +473,8 @@ def tsmt(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int | None = None,
     return _tsmt_diff(x, y, block_m, block_a, splits, p)
 
 
-def _ceil_mult(x: int, q: int) -> int:
-    return ((x + q - 1) // q) * q
+# Quantization primitive, owned by the contract layer (one copy).
+_ceil_mult = contracts.ceil_mult
 
 
 # Re-exported oracles so callers can A/B against the pure-jnp path.

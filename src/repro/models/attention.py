@@ -304,6 +304,9 @@ def mla_decode(params, x, cache_c, cache_kpe, pos, *, n_heads, nope_dim,
 
     if absorb:
         # q_c[b,h,l] = sum_d q_nope[b,h,d] * wuk[l,h,d]
+        # repro: allow-raw-param-matmul (absorbed decode: the 3-D per-head
+        # W_uk slice folds into a batch-1 f32 einsum -- no 2-D tsmm form,
+        # and per-step shapes never classify tall-skinny)
         q_c = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
                          wuk.astype(jnp.float32))
         s_nope = jnp.einsum("bhl,bsl->bhs", q_c, cache_c.astype(jnp.float32))
@@ -314,8 +317,12 @@ def mla_decode(params, x, cache_c, cache_kpe, pos, *, n_heads, nope_dim,
         scores = jnp.where(mask, scores, _NEG)
         p = jax.nn.softmax(scores, axis=-1)
         ctx_c = jnp.einsum("bhs,bsl->bhl", p, cache_c.astype(jnp.float32))
+        # repro: allow-raw-param-matmul (absorbed decode W_uv fold; see wuk)
         ctx = jnp.einsum("bhl,lhd->bhd", ctx_c, wuv.astype(jnp.float32))
     else:
+        # repro: allow-raw-param-matmul (non-absorbed decode re-expands the
+        # latent cache through the 3-D per-head W_ukv -- same exemption as
+        # the absorbed path's folds above)
         kv = jnp.einsum("bsl,lhd->bshd", cache_c.astype(jnp.float32),
                         wukv.astype(jnp.float32))
         k_nope, v = kv[..., :nope_dim], kv[..., nope_dim:]

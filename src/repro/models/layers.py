@@ -24,6 +24,9 @@ def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
 
 
 def _dense_raw(w, x):
+    # repro: allow-raw-param-matmul (this IS the dense primitive dense()
+    # routes non-tsmm shapes to -- 1-D params and the mode="dense" A/B arm;
+    # wrapping it in tsmm would recurse)
     return lax.dot_general(
         x, w, (((x.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32).astype(x.dtype)
@@ -192,6 +195,9 @@ def embed(params, tokens):
 
 def unembed(params, x):
     """Logits in f32 (loss stability); table may be the tied embedding."""
+    # repro: allow-raw-param-matmul (logits must stay f32 -- tsmm returns
+    # the operand dtype -- and vocab-sized outputs never classify
+    # tall-skinny; GSPMD shards the dense dot over the tied table)
     return lax.dot_general(
         x, params["table"], (((x.ndim - 1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)

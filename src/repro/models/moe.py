@@ -154,14 +154,19 @@ def moe_fwd(params, x, cfg: MoEConfig):
 
     # Expert SwiGLU (EP over 'model'; G rides along sharded over dp).
     ew = params["experts"]
+    # repro: allow-raw-param-matmul (grouped per-expert einsum: the (E,d,f)
+    # weight has no 2-D rhs form tsmm accepts, and the contraction must
+    # stay a single GSPMD op so EP resolves to all-to-alls)
     g = maybe_wsc(jnp.einsum("gecd,edf->gecf", buf, ew["w_gate"],
                              preferred_element_type=jnp.float32),
                   dp, "model", None, None)
+    # repro: allow-raw-param-matmul (same grouped-expert form as w_gate)
     u = maybe_wsc(jnp.einsum("gecd,edf->gecf", buf, ew["w_up"],
                              preferred_element_type=jnp.float32),
                   dp, "model", None, None)
     h = (jax.nn.silu(g) * u).astype(x.dtype)
     h = maybe_wsc(h, dp, "model", None, None)
+    # repro: allow-raw-param-matmul (same grouped-expert form as w_gate)
     y = jnp.einsum("gecf,efd->gecd", h, ew["w_down"],
                    preferred_element_type=jnp.float32).astype(x.dtype)
     y = maybe_wsc(y, dp, "model", None, None)

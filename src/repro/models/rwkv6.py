@@ -167,6 +167,8 @@ def rwkv6_time_mix_ref(params, x, cfg: RWKV6Config):
         rt, kt, vt, wt = inp                                # (B,H,D)
         kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
         wkv = st + params["u"][None, :, :, None] * kv
+        # repro: allow-raw-param-matmul (wkv is the recurrent attention
+        # STATE, not a parameter -- the name trips the weight heuristic)
         yt = jnp.einsum("bhd,bhde->bhe", rt, wkv)
         return st * wt[..., None] + kv, yt
 
@@ -187,6 +189,7 @@ def rwkv6_time_mix_decode(params, x, state, x_prev, cfg: RWKV6Config):
     wt = jnp.exp(_headed(logw, h, dh)[:, 0])
     kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
     wkv = state + params["u"][None, :, :, None] * kv
+    # repro: allow-raw-param-matmul (wkv is recurrent state; see time_mix)
     yt = jnp.einsum("bhd,bhde->bhe", rt, wkv)[:, None]      # (B,1,H,D)
     new_state = state * wt[..., None] + kv
     out = _out_stage(params, yt, g, h, dh)

@@ -372,6 +372,37 @@ def test_fit_spec_empty_observations_is_identity():
     assert result.error_before == result.error_after == 0.0
 
 
+def test_calibrate_base_table_merges_records_and_ages_out_fits():
+    """Partial re-calibration: ``calibrate(base_table=...)`` keeps base
+    records (new measurements win shared buckets) but drops the base's
+    SpecFit cells -- stale fitted constants from an older run must not
+    keep steering the analytic chooser."""
+    pol = tsmm.GemmPolicy(interpret=True)
+    base = autotune.calibrate([("tsm2r", 1024, 256, 8),
+                               ("tsm2l", 1024, 16, 16)],
+                              dtype=jnp.float32, policy=pol,
+                              reps=1, warmup=0).table
+    # poison one base fit so survival would be observable
+    stale = autotune.SpecFit("tsm2l", autotune.bucket_shape(1024, 16, 16),
+                             "float32", pol.spec.name,
+                             step_overhead=123.0, dma_latency=456.0)
+    base = autotune.TuningTable(records=base.records, fits=(stale,))
+
+    res = autotune.calibrate([("tsm2r", 1024, 256, 8)], dtype=jnp.float32,
+                             policy=pol, reps=1, warmup=0, base_table=base)
+    keys = {r.key for r in res.table.records}
+    # the un-remeasured base record survives; the shared bucket is replaced
+    assert any(k.startswith("tsm2l|") for k in keys)
+    assert any(k.startswith("tsm2r|") for k in keys)
+    new_rec = next(r for r in res.table.records if r.kind == "tsm2r")
+    assert new_rec.shape == (1024, 256, 8)
+    # every fit comes from THIS run: the poisoned tsm2l cell is gone
+    assert all(f.step_overhead != 123.0 for f in res.table.fits)
+    fit_kinds = {f.kind for f in res.table.fits}
+    assert "tsm2l" not in fit_kinds and "tsm2r" in fit_kinds
+    assert ("*", (0, 0, 0)) in {(f.kind, f.bucket) for f in res.table.fits}
+
+
 # ---------------------------------------------------------------------------
 # benchmarks.run --autotune smoke (interpret mode)
 # ---------------------------------------------------------------------------

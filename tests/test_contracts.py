@@ -1,0 +1,373 @@
+"""Contract layer (`repro.analysis.contracts`) + offline auditor.
+
+Three tiers:
+* predicate units -- one test per contract rule, with the numbers pinned;
+* agreement -- the perf model's candidate grids, the choosers, and
+  ``ops.resolve_params`` all stay inside the contract set, and resolved
+  configs actually RUN (interpret mode) and match the jnp oracle;
+* acceptance -- the auditor provably rejects seeded violations (an
+  over-budget tuning entry, a non-lane-quantized block, an indivisible
+  psum_scatter axis) and passes clean on the committed tree.
+"""
+
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import audit, contracts
+from repro.core import autotune, perf_model, tsmm
+from repro.kernels import ops, ref
+
+V5E = perf_model.V5E
+F32 = jnp.float32
+
+
+def _rules(violations):
+    return [v.rule for v in violations]
+
+
+# ---------------------------------------------------------------------------
+# Predicate units: one per rule
+# ---------------------------------------------------------------------------
+
+def test_footprints_are_the_single_source():
+    """perf_model's vmem_usage functions are aliases of the contract
+    footprints -- the PR-3 drift class (two copies of the math) is gone."""
+    assert (perf_model.tsm2r_vmem_usage(1024, 512, 8, F32)
+            == contracts.tsm2r_footprint(1024, 512, 8, F32))
+    assert (perf_model.tsm2l_vmem_usage(4096, 16, 16, F32)
+            == contracts.tsm2l_footprint(4096, 16, 16, F32))
+    assert (perf_model.tsmt_vmem_usage(2048, 128, 8, F32)
+            == contracts.tsmt_footprint(2048, 128, 8, F32))
+    # pinned value: 2*bm*bk*4 + 2*bk*128*4 + bm*128*4 + bm*128*4
+    assert contracts.tsm2r_footprint(256, 128, 8, F32) == (
+        2 * 256 * 128 * 4 + 2 * 128 * 128 * 4 + 256 * 128 * 4
+        + 256 * 128 * 4)
+
+
+def test_lane_quant_violation():
+    vios = contracts.check_kernel_config(
+        "tsm2r", (4096, 512, 8), {"block_m": 256, "block_k": 130}, F32, V5E)
+    assert "lane-quant" in _rules(vios)
+    assert not contracts.feasible(
+        "tsm2r", (4096, 512, 8), {"block_m": 256, "block_k": 130}, F32, V5E)
+
+
+def test_sublane_quant_violation():
+    vios = contracts.check_kernel_config(
+        "tsm2r", (4096, 512, 8), {"block_m": 100, "block_k": 128}, F32, V5E)
+    assert "sublane-quant" in _rules(vios)
+
+
+def test_vmem_budget_violation():
+    tight = dataclasses.replace(V5E, vmem_usable=0.01)
+    vios = contracts.check_kernel_config(
+        "tsm2r", (8192, 4096, 8), {"block_m": 4096, "block_k": 2048},
+        F32, tight)
+    assert "vmem-budget" in _rules(vios)
+
+
+def test_block_exceeds_dim_violation():
+    vios = contracts.check_kernel_config(
+        "tsm2r", (1000, 100, 8), {"block_m": 2048, "block_k": 128}, F32, V5E)
+    assert "block-exceeds-dim" in _rules(vios)
+    # block_k past ceil_mult(k, 128) is pure padding too
+    vios = contracts.check_kernel_config(
+        "tsm2r", (4096, 100, 8), {"block_m": 256, "block_k": 256}, F32, V5E)
+    assert "block-exceeds-dim" in _rules(vios)
+
+
+def test_split_whole_slice_violation():
+    # k=512: 4 slices x block_k=256 = 1024 > ceil_mult(512, 128)
+    vios = contracts.check_kernel_config(
+        "tsm2r", (4096, 512, 8),
+        {"block_m": 256, "block_k": 256, "splits": 4}, F32, V5E)
+    assert "split-whole-slice" in _rules(vios)
+    # 2 slices x 256 == 512: exactly whole, legal
+    assert contracts.feasible(
+        "tsm2r", (4096, 512, 8),
+        {"block_m": 256, "block_k": 256, "splits": 2}, F32, V5E)
+
+
+def test_tsm2l_split_unsupported():
+    vios = contracts.check_kernel_config(
+        "tsm2l", (65536, 16, 16), {"block_m": 4096, "splits": 2}, F32, V5E)
+    assert "split-unsupported" in _rules(vios)
+
+
+def test_accumulator_limit_is_not_a_candidate_filter():
+    """The TSMT b-limit is a dispatch contract on the shape: the checker
+    reports it, but ``feasible`` (the candidate filter) must NOT prune on
+    it -- the enumerated grid the model scores stays shape-independent."""
+    params = {"block_m": 256, "block_a": 128, "splits": 1}
+    shape = (65536, 128, contracts.TSMT_MAX_B + 1)
+    assert "accumulator-limit" in _rules(
+        contracts.check_kernel_config("tsmt", shape, params, F32, V5E))
+    assert contracts.feasible("tsmt", shape, params, F32, V5E)
+    # a max_skinny_t-style override raises the limit
+    assert "accumulator-limit" not in _rules(contracts.check_kernel_config(
+        "tsmt", shape, params, F32, V5E, max_b=1024))
+
+
+def test_param_schema_violations():
+    assert _rules(contracts.check_kernel_config(
+        "tsmr", (4096, 512, 8), {}, F32, V5E)) == ["unknown-kind"]
+    assert _rules(contracts.check_kernel_config(
+        "tsm2r", (4096, 512, 8), {"block_m": 256}, F32, V5E)) == [
+            "missing-params"]
+    assert _rules(contracts.check_kernel_config(
+        "tsm2r", (4096, 512, 8), {"block_m": 256, "block_k": -1},
+        F32, V5E)) == ["bad-param"]
+
+
+def test_grid_divisibility_contract():
+    ok = contracts.check_grid(
+        "tsm2r", (4096, 1024, 8),
+        {"block_m": 256, "block_k": 256, "splits": 2})
+    assert ok == []
+    bad = contracts.check_grid(
+        "tsm2r", (4096, 1000, 8),
+        {"block_m": 256, "block_k": 256, "splits": 2})
+    assert "grid-divisibility" in _rules(bad)
+    bad_t = contracts.check_grid(
+        "tsmt", (4100, 128, 8), {"block_m": 256, "block_a": 128, "splits": 2})
+    assert "grid-divisibility" in _rules(bad_t)
+
+
+def test_scatter_divisibility_contract():
+    assert contracts.scatter_divisible(64, 2)
+    assert not contracts.scatter_divisible(63, 2)
+    assert contracts.check_scatter(64, 2) == []
+    assert _rules(contracts.check_scatter(63, 2)) == [
+        "psum-scatter-divisibility"]
+
+
+def test_executor_reduce_ok():
+    assert contracts.executor_reduce_ok(("psum", "none"), "psum")
+    assert not contracts.executor_reduce_ok(("psum_scatter",), "psum")
+
+
+def test_backward_policy_contract_on_real_policies():
+    """tsmm.backward_policy satisfies the contract for every reachable
+    field combo (the auditor's sweep, pinned here as a test)."""
+    for mode in ("auto", "dense", "tsm2r"):
+        for reduce_ in ("psum", "psum_scatter", "none"):
+            for split in ("auto", "never", 4):
+                p = tsmm.GemmPolicy(mode=mode, reduce=reduce_, split=split,
+                                    executor="shard_map")
+                assert contracts.check_backward_policy(
+                    p, tsmm.backward_policy(p)) == []
+
+
+def test_backward_policy_contract_catches_drift():
+    p = tsmm.GemmPolicy(reduce="none", split=4, mode="tsm2r",
+                        executor="shard_map")
+    bad = p  # identity "backward": keeps everything it must change
+    rules = _rules(contracts.check_backward_policy(p, bad))
+    assert set(rules) == {"backward-reduce", "backward-split",
+                          "backward-executor", "backward-mode"}
+
+
+def test_tuning_record_contract_unknown_executor():
+    vios = contracts.check_tuning_record(
+        "tsm2r", (4096, 1024, 8), {"block_m": 256, "block_k": 128}, F32,
+        V5E, executor="cuda", known_executors=("pallas-tpu", "interpret"))
+    assert "unknown-executor" in _rules(vios)
+
+
+# ---------------------------------------------------------------------------
+# Agreement: model grids / choosers / resolver stay inside the contract set
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,shape", [
+    ("tsm2r", (4096, 1024, 8)),
+    ("tsm2r", (4100, 130, 3)),
+    ("tsm2l", (65536, 16, 16)),
+    ("tsmt", (8200, 130, 8)),
+])
+def test_candidates_are_contract_clean(kind, shape):
+    checked, vios = audit.audit_candidate_grids(shapes={kind: (shape,)})
+    assert checked > 0 and vios == []
+
+
+def test_resolver_sweep_is_contract_clean():
+    checked, vios = audit.audit_resolved_configs()
+    assert checked > 0
+    assert vios == [], [v.to_json() for v in vios]
+
+
+def _oracle(kind, x, y):
+    if kind == "tsmt":
+        return ref.tsmt_ref(x, y)
+    return ref.tsm2r_ref(x, y)
+
+
+def _rand_shape(rng, kind):
+    if kind == "tsm2r":
+        return (rng.randrange(256, 2048), rng.randrange(128, 1024),
+                rng.randrange(1, 17))
+    if kind == "tsm2l":
+        return (rng.randrange(1024, 8192), rng.randrange(2, 17),
+                rng.randrange(2, 17))
+    return (rng.randrange(256, 4096), rng.randrange(2, 65),
+            rng.randrange(2, 17))
+
+
+@pytest.mark.parametrize("kind", ["tsm2r", "tsm2l", "tsmt"])
+@pytest.mark.parametrize("case", range(3))
+def test_resolved_configs_run_and_match_oracle(kind, case):
+    """Seeded sweep: the resolver's params pass the contracts AND the
+    kernel launched with them (interpret mode, verify_contracts on)
+    reproduces the oracle -- the contract set is sufficient, not just
+    necessary."""
+    rng = random.Random(1000 * case + {"tsm2r": 1, "tsm2l": 2,
+                                       "tsmt": 3}[kind])
+    m, d1, d2 = _rand_shape(rng, kind)
+    pol = tsmm.GemmPolicy(interpret=True, verify_contracts=True)
+    params = ops.resolve_params(kind, m, d1, d2, F32, pol, interpret=True)
+    assert contracts.feasible(kind, (m, d1, d2), params, F32, pol.spec)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(case))
+    if kind == "tsmt":
+        x = jax.random.uniform(k1, (m, d1), F32, -1, 1)
+        y = jax.random.uniform(k2, (m, d2), F32, -1, 1)
+        got = ops.tsmt(x, y, policy=pol, **params)
+    else:
+        x = jax.random.uniform(k1, (m, d1), F32, -1, 1)
+        y = jax.random.uniform(k2, (d1, d2), F32, -1, 1)
+        op = ops.tsm2r if kind == "tsm2r" else ops.tsm2l
+        legal = {k: v for k, v in params.items()
+                 if kind == "tsm2r" or k == "block_m"}
+        got = op(x, y, policy=pol, **legal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(_oracle(kind, x, y), np.float32),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# verify_contracts: the trace-time assertion mode
+# ---------------------------------------------------------------------------
+
+def test_verify_contracts_rejects_bad_explicit_block():
+    pol = tsmm.GemmPolicy(interpret=True, verify_contracts=True)
+    with pytest.raises(ValueError, match=r"\[lane-quant\]"):
+        ops.resolve_params("tsm2r", 4096, 512, 8, F32, pol, block_k=130,
+                           interpret=True)
+    with pytest.raises(ValueError, match="verify_contracts"):
+        ops.tsm2r(jnp.ones((1024, 512), F32), jnp.ones((512, 8), F32),
+                  block_k=130, policy=pol)
+
+
+def test_verify_contracts_off_still_runs_quietly():
+    """Without the flag, a misquantized explicit block still runs (Mosaic
+    pads) -- the historical behavior stays available for debugging."""
+    a = jax.random.uniform(jax.random.PRNGKey(0), (512, 256), F32, -1, 1)
+    b = jax.random.uniform(jax.random.PRNGKey(1), (256, 8), F32, -1, 1)
+    got = ops.tsm2r(a, b, block_k=130, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.tsm2r_ref(a, b)),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_verify_contracts_default_resolution_never_raises():
+    pol = tsmm.GemmPolicy(interpret=True, verify_contracts=True)
+    for kind, shape in [("tsm2r", (20480, 20480, 16)),
+                        ("tsm2l", (100000, 8, 8)),
+                        ("tsmt", (65536, 16, 16))]:
+        ops.resolve_params(kind, *shape, jnp.bfloat16, pol, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Auditor acceptance: seeded violations are rejected, clean tree passes
+# ---------------------------------------------------------------------------
+
+def test_audit_rejects_over_budget_tuning_entry():
+    rec = autotune.TuningRecord(
+        kind="tsm2r", bucket=autotune.bucket_shape(8192, 4096, 8),
+        dtype="float32", spec_name="tpu_v5e", executor="interpret",
+        shape=(8192, 4096, 8),
+        # 4096x4096 f32 blocks: ~190 MiB footprint >> any fitted budget
+        params=(("block_k", 4096), ("block_m", 4096), ("splits", 1)),
+        measured_us=1.0, model_us=1.0, model_error=0.0,
+        model_pick=(("block_k", 4096), ("block_m", 4096), ("splits", 1)),
+        model_pick_measured_us=1.0)
+    table = autotune.TuningTable.from_records([rec])
+    checked, vios = audit.audit_tuning_table(table)
+    assert checked == 1
+    assert "vmem-budget" in _rules(vios)
+
+
+def test_audit_rejects_non_lane_quantized_tuning_entry():
+    rec = autotune.TuningRecord(
+        kind="tsm2r", bucket=autotune.bucket_shape(4096, 512, 8),
+        dtype="float32", spec_name="tpu_v5e", executor="interpret",
+        shape=(4096, 512, 8),
+        params=(("block_k", 130), ("block_m", 256), ("splits", 1)),
+        measured_us=1.0, model_us=1.0, model_error=0.0,
+        model_pick=(("block_k", 130), ("block_m", 256), ("splits", 1)),
+        model_pick_measured_us=1.0)
+    _, vios = audit.audit_tuning_table(
+        autotune.TuningTable.from_records([rec]))
+    assert "lane-quant" in _rules(vios)
+
+
+def test_audit_rejects_bucket_mismatch():
+    rec = autotune.TuningRecord(
+        kind="tsm2r", bucket=(1, 1, 1), dtype="float32",
+        spec_name="tpu_v5e", executor="interpret", shape=(4096, 512, 8),
+        params=(("block_k", 128), ("block_m", 256), ("splits", 1)),
+        measured_us=1.0, model_us=1.0, model_error=0.0,
+        model_pick=(("block_k", 128), ("block_m", 256), ("splits", 1)),
+        model_pick_measured_us=1.0)
+    _, vios = audit.audit_tuning_table(
+        autotune.TuningTable.from_records([rec]))
+    assert "bucket-mismatch" in _rules(vios)
+
+
+def test_audit_rejects_indivisible_scatter_axis():
+    bench = {"dispatch_sanity": [{
+        "arm": "mesh_psum_scatter", "shape": [4096, 63, 8],
+        "expected": ["pallas-tpu", "shard_map-scatter"],
+        "observed": ["pallas-tpu", "shard_map-scatter"], "ok": True,
+    }]}
+    checked, vios = audit.audit_bench(bench)
+    assert checked == 1
+    assert "psum-scatter-divisibility" in _rules(vios)
+
+
+def test_audit_rejects_failed_or_unknown_dispatch_arm():
+    bench = {"dispatch_sanity": [
+        {"arm": "auto", "shape": [4096, 512, 8], "expected": "pallas-tpu",
+         "observed": ["cuda-core"], "ok": False},
+    ]}
+    _, vios = audit.audit_bench(bench)
+    rules = _rules(vios)
+    assert "bench-dispatch-failed" in rules
+    assert "bench-dispatch-mismatch" in rules
+    assert "unknown-executor" in rules
+
+
+def test_audit_clean_on_committed_tree():
+    """`python -m repro.analysis.audit --strict` over the committed bench,
+    tuning table, executors and policies finds nothing."""
+    report = audit.run_audit()
+    assert report["schema"] == audit.AUDIT_SCHEMA
+    assert report["ok"], report
+    assert report["checked"] > 1000
+    # every section actually ran against the committed artifacts
+    assert set(report["sections"]) >= {"candidate-grids", "resolved-configs",
+                                       "policies", "tuning-table",
+                                       "bench-dispatch"}
+
+
+def test_audit_cli_strict_and_json(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    rc = audit.main(["--strict", "--json", str(out)])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "0 violation(s) -- clean" in text
+    import json
+    data = json.loads(out.read_text())
+    assert data["schema"] == audit.AUDIT_SCHEMA and data["ok"]

@@ -1,0 +1,244 @@
+"""Repo invariant linter (`repro.analysis.lint`): one fixture snippet per
+rule, pragma-waiver semantics, and the clean-tree assertion that keeps the
+CI job strict."""
+
+import textwrap
+
+from repro.analysis import lint
+
+
+def _lint(src, rel="models/thing.py"):
+    return lint.lint_source(textwrap.dedent(src), rel, rel)
+
+
+def _rules(errors):
+    return [e.rule for e in errors]
+
+
+# ---------------------------------------------------------------------------
+# RA001: jax._src confinement
+# ---------------------------------------------------------------------------
+
+def test_jax_src_import_flagged_outside_compat():
+    errs = _lint("""\
+        import jax._src.pallas as pl
+        from jax._src import core
+        """, rel="kernels/tsm2r.py")
+    assert _rules(errs) == ["jax-src-import", "jax-src-import"]
+
+
+def test_jax_src_import_allowed_in_compat():
+    errs = _lint("from jax._src import pallas\n", rel="kernels/compat.py")
+    assert errs == []
+
+
+def test_plain_jax_import_is_fine():
+    assert _lint("import jax\nfrom jax import lax\n",
+                 rel="kernels/tsm2r.py") == []
+
+
+# ---------------------------------------------------------------------------
+# RA002: raw parameter matmuls in models//optim//serve/
+# ---------------------------------------------------------------------------
+
+def test_raw_param_matmul_flagged_in_models():
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(params, x):
+            return jnp.dot(x, params["w_out"])
+        """)
+    assert _rules(errs) == ["raw-param-matmul"]
+
+
+def test_param_einsum_and_matmul_operator_flagged():
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(w, wuk, x):
+            a = jnp.einsum("td,df->tf", x, wuk)
+            b = x @ w
+            return a + b
+        """)
+    assert _rules(errs) == ["raw-param-matmul", "raw-param-matmul"]
+
+
+def test_unwrapped_operand_still_matches():
+    # .astype/.T/.reshape wrappers must not hide the parameter
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(w_q, x):
+            return jnp.matmul(x, w_q.astype(jnp.float32).T)
+        """)
+    assert _rules(errs) == ["raw-param-matmul"]
+
+
+def test_activation_matmul_not_flagged():
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(q, k):
+            return jnp.einsum("thd,shd->tsh", q, k)
+        """)
+    assert errs == []
+
+
+def test_raw_param_matmul_ignored_outside_scoped_dirs():
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(w, x):
+            return jnp.dot(x, w)
+        """, rel="kernels/ref.py")
+    assert errs == []
+
+
+def test_einsum_spec_string_is_not_an_operand():
+    # the "w" in an einsum spec string must not trip the name heuristic
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(a, b):
+            return jnp.einsum("wx,xy->wy", a, b)
+        """)
+    assert errs == []
+
+
+# ---------------------------------------------------------------------------
+# RA003: env reads at trace time
+# ---------------------------------------------------------------------------
+
+def test_env_read_flagged():
+    errs = _lint("""\
+        import os
+
+        def f():
+            a = os.getenv("REPRO_TSMM")
+            b = os.environ.get("REPRO_SPEC", "v5e")
+            c = os.environ["HOME"]
+            return a, b, c
+        """, rel="core/perf_model.py")
+    assert _rules(errs) == ["env-read"] * 3
+
+
+def test_env_read_allowed_in_policy_constructor_and_launch():
+    src = """\
+        import os
+
+        def _policy_from_env():
+            return os.getenv("REPRO_TSMM")
+        """
+    assert _lint(src, rel="core/tsmm.py") == []
+    assert _lint("import os\nv = os.getenv('X')\n",
+                 rel="launch/run.py") == []
+    # same function name in another file is NOT exempt
+    assert _rules(_lint(src, rel="core/autotune.py")) == ["env-read"]
+
+
+# ---------------------------------------------------------------------------
+# RA004: executor reduce contracts
+# ---------------------------------------------------------------------------
+
+def test_register_executor_without_reduce_flagged():
+    errs = _lint("""\
+        from repro.core import tsmm
+
+        tsmm.register_executor("my-exec", lambda *a: None)
+        """, rel="core/extras.py")
+    assert _rules(errs) == ["executor-contract"]
+
+
+def test_register_executor_with_reduce_ok():
+    errs = _lint("""\
+        from repro.core import tsmm
+
+        tsmm.register_executor("my-exec", lambda *a: None,
+                               reduce=("psum",))
+        """, rel="core/extras.py")
+    assert errs == []
+
+
+# ---------------------------------------------------------------------------
+# Pragma waivers
+# ---------------------------------------------------------------------------
+
+def test_pragma_waives_same_and_next_line():
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(w, x):
+            # repro: allow-raw-param-matmul (tested exemption)
+            return jnp.dot(x, w)
+        """)
+    assert errs == []
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(w, x):
+            return jnp.dot(x, w)  # repro: allow-raw-param-matmul (inline)
+        """)
+    assert errs == []
+
+
+def test_pragma_carries_through_comment_block_and_wrapped_stmt():
+    """A multi-line pragma comment above a multi-line statement waives the
+    whole statement (the moe.py/attention.py idiom)."""
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(ew, buf, wsc):
+            # repro: allow-raw-param-matmul (grouped per-expert einsum:
+            # no 2-D rhs form tsmm accepts; the contraction must stay one
+            # GSPMD op)
+            g = wsc(jnp.einsum("gecd,edf->gecf", buf, ew["w_gate"]),
+                    "model")
+            return g
+        """)
+    assert errs == []
+
+
+def test_pragma_waives_only_its_rule_and_statement():
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(w, x):
+            # repro: allow-env-read (wrong rule)
+            a = jnp.dot(x, w)
+            b = jnp.dot(x, w)
+            return a + b
+        """)
+    # wrong rule name: both dots still flagged
+    assert _rules(errs) == ["raw-param-matmul"] * 2
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(w, x):
+            # repro: allow-raw-param-matmul (first only)
+            a = jnp.dot(x, w)
+            b = jnp.dot(x, w)
+            return a + b
+        """)
+    # the waiver covers exactly one statement, not the rest of the block
+    assert _rules(errs) == ["raw-param-matmul"]
+
+
+def test_syntax_error_is_reported_not_raised():
+    errs = _lint("def f(:\n", rel="models/broken.py")
+    assert _rules(errs) == ["syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# Clean tree
+# ---------------------------------------------------------------------------
+
+def test_committed_tree_is_lint_clean():
+    """`python -m repro.analysis.lint` on the repro package finds nothing:
+    every legitimate exemption carries a documented pragma."""
+    errors = lint.lint_paths()
+    assert errors == [], "\n".join(str(e) for e in errors)
+
+
+def test_main_exit_codes(capsys):
+    assert lint.main([]) == 0
+    assert "clean" in capsys.readouterr().out
