@@ -1,0 +1,55 @@
+"""Tall-skinny QR arms: CholeskyQR2 on the kernels vs the dense oracles.
+
+Three arms per shape, all jit-cache isolated and dispatch-asserted via
+``timeit_arm``:
+
+* ``qr_tsqr`` -- ``repro.linalg.tsqr``; the arm FAILS unless every GEMM
+  stage (Gram + apply, every pass) dispatched on the kernel executor --
+  this is the executor assertion the acceptance bar asks for, in timing
+  form (the committed-baseline form lives in ``dispatch_sanity``'s
+  ``qr_stages`` arm).
+* ``qr_oracle`` -- ``jnp.linalg.qr`` (Householder on stock XLA); must not
+  touch the dispatcher at all.
+* ``qr_gram_schmidt`` -- PowerSGD's unrolled Gram-Schmidt, the
+  orthogonalization ``orth="tsqr"`` replaces; also dispatcher-free.
+
+On this CPU container the kernels run in interpret mode, so the tsqr wall
+times are mechanism-only (see common.py's measurement policy); relative
+oracle/GS times are meaningful.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, rand, timeit_arm
+from repro import linalg
+from repro.core import tsmm
+from repro.optim import powersgd
+
+# (m, r): the PowerSGD P-factor shape and a taller sketching-basis shape.
+SHAPES = [(8192, 16), (65536, 32)]
+
+
+def run():
+    rows = []
+    for m, r in SHAPES:
+        a = rand(0, (m, r))
+        us, log = timeit_arm(lambda a_: linalg.tsqr(a_)[0], a,
+                             policy=tsmm.GemmPolicy(),
+                             expect_executors={"pallas-tpu"})
+        kinds = "+".join(sorted({e.kind for e in log}))
+        rows.append((f"qr_tsqr_m{m}_r{r}", f"{us:.1f}",
+                     f"cholqr2;kinds={kinds};stages={len(log)}"))
+        us, _ = timeit_arm(lambda a_: jnp.linalg.qr(a_)[0], a,
+                           expect_executors=set())
+        rows.append((f"qr_oracle_m{m}_r{r}", f"{us:.1f}", "householder-xla"))
+        us, _ = timeit_arm(powersgd._orthonormalize, a,
+                           expect_executors=set())
+        rows.append((f"qr_gram_schmidt_m{m}_r{r}", f"{us:.1f}",
+                     "unrolled-gs"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

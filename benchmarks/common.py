@@ -99,6 +99,22 @@ def dispatch_sanity(m: int = 4096, k: int = 512, n: int = 8):
                     "split": splits_seen,
                     "ok": (observed == ["pallas-tpu"]
                            and splits_seen == [str(knob)])})
+    # QR stages: both GEMMs of the CholeskyQR2 factorization (Gram and
+    # R^-1 apply, every pass) must land on the tall-skinny kernels -- the
+    # Gram as tsmt, the apply as tsm2l, and nothing on dense-xla. The
+    # kind set is asserted alongside the executor set: a classifier drift
+    # that silently sent the Gram to tsm2r would keep the executor green.
+    from repro import linalg
+    a_qr = rand(6, (m, 16))
+    _, log = jit_isolated(lambda a_: linalg.tsqr(a_)[0], a_qr,
+                          policy=tsmm.GemmPolicy())
+    observed = sorted({e.executor for e in log})
+    kinds = sorted({e.kind for e in log})
+    out.append({"arm": "qr_stages", "shape": [m, 16, 16],
+                "expected": "pallas-tpu", "observed": observed,
+                "kinds": kinds,
+                "ok": (observed == ["pallas-tpu"]
+                       and kinds == ["tsm2l", "tsmt"])})
     devs = jax.devices()
     # The mesh arms need a per-shard shape that still classifies tsmt and
     # a scatter dim that divides the shard count: scale the tall dim with

@@ -186,8 +186,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_ab, bench_ablation, bench_collectives,
-                            bench_e2e, bench_params, bench_rect, bench_tsm2l,
-                            bench_tsm2r)
+                            bench_e2e, bench_params, bench_qr, bench_rect,
+                            bench_tsm2l, bench_tsm2r)
     sections = [
         ("Fig6/7+10/11: TSM2R speedup + utilization", bench_tsm2r.run),
         ("Fig5+13/14: TSM2L tcf sweep + speedup", bench_tsm2l.run),
@@ -196,6 +196,7 @@ def main(argv=None) -> None:
         ("Fig6 ladder: V0->V3 ablation", bench_ablation.run),
         ("A/B: policy arms, jit-cache isolated", bench_ab.run),
         ("collectives: psum vs psum_scatter tsmm_t arms", bench_collectives.run),
+        ("qr: tsqr vs dense-oracle vs gram-schmidt", bench_qr.run),
         ("e2e: train/decode step throughput", bench_e2e.run),
     ]
     if args.sections:

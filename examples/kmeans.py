@@ -43,18 +43,32 @@ def kmeans_step(x, centroids):
     return new_c, assign, inertia
 
 
+@jax.jit
+def _pp_farthest(x, centers, n_filled):
+    """One k-means++ pass at the FIXED (N, D) @ (D, K) shape: unfilled
+    center rows are masked out of the min instead of sliced off, so every
+    pass reuses one compiled kernel and one tuning bucket."""
+    dots = tsmm.tsmm(x, centers.T)                     # (N, K) skinny
+    d2 = (jnp.sum(x * x, 1, keepdims=True) - 2 * dots
+          + jnp.sum(centers * centers, 1)[None, :])
+    d2 = jnp.where(jnp.arange(K)[None, :] < n_filled, d2, jnp.inf)
+    return jnp.argmax(d2.min(axis=1))
+
+
 def kmeanspp_init(key, x):
-    """k-means++ seeding -- each min-distance pass is itself a TSM2R."""
+    """k-means++ seeding -- each min-distance pass is itself a TSM2R.
+
+    The centers operand is padded to the full (K, D) width up front and
+    the filled count rides in as a traced scalar: the naive "stack what
+    we have so far" formulation retraces the tsmm K-1 times with a
+    growing skinny dim (a jit cache entry AND an autotune bucket per i).
+    """
     idx = jax.random.randint(key, (), 0, x.shape[0])
-    centers = [x[idx]]
+    centers = jnp.zeros((K, D), x.dtype).at[0].set(x[idx])
     for i in range(1, K):
-        c = jnp.stack(centers)
-        dots = tsmm.tsmm(x, c.T)                       # (N, i) skinny
-        d2 = (jnp.sum(x * x, 1, keepdims=True) - 2 * dots
-              + jnp.sum(c * c, 1)[None, :]).min(axis=1)
-        nxt = jnp.argmax(d2)     # farthest-point variant: deterministic coverage
-        centers.append(x[nxt])
-    return jnp.stack(centers)
+        nxt = _pp_farthest(x, centers, i)   # farthest-point: deterministic
+        centers = centers.at[i].set(x[nxt])
+    return centers
 
 
 def main():

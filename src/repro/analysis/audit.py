@@ -25,6 +25,13 @@ Sections (one report entry each):
 * ``bench-dispatch`` -- the committed ``BENCH_*.json`` dispatch-sanity
   arms observed only registered executors, matched their expectations,
   and scatter arms ran on a divisible output axis.
+* ``qr-resolved`` -- every GEMM stage the ``repro.linalg`` QR subsystem
+  can hand the resolver (:func:`contracts.qr_stage_shapes`: the Gram
+  ``tsmt`` and apply ``tsm2l`` of CholeskyQR2, replicated and per-shard
+  under the tree-TSQR shard counts) resolves to a launchable, grid-exact
+  configuration under every spec/split arm. QR compute is f32 by
+  construction (bf16 operands are upcast before the Gram), so the sweep
+  pins f32.
 
 CLI::
 
@@ -53,6 +60,7 @@ __all__ = [
     "SWEEP_SHAPES",
     "audit_candidate_grids",
     "audit_resolved_configs",
+    "audit_qr_configs",
     "audit_tuning_table",
     "audit_policies",
     "audit_bench",
@@ -85,6 +93,15 @@ SWEEP_SPLITS = ("auto", 2, "never")
 # The bench mesh arms run on the CI host topology (2 virtual devices); the
 # scatter arms' output axis must tile over that many shards to exist.
 BENCH_MESH_SHARDS = 2
+
+# QR sweep: (m, r) operands the linalg subsystem plausibly factors
+# (PowerSGD P factors, k-means centers, sketching bases) including odd /
+# non-lane-multiple columns, crossed with tree-TSQR shard counts. Stages
+# are derived by contracts.qr_stage_shapes; shard counts that don't tile
+# an m are skipped (tree_tsqr's own precondition).
+QR_SWEEP_SHAPES = ((8192, 16), (65536, 16), (1 << 20, 32), (4096, 3),
+                   (100000, 64), (16384, 130))
+QR_SWEEP_SHARDS = (1, 2, 8)
 
 
 def _candidate_dicts(kind, m, d1, d2, spec, dtype):
@@ -171,6 +188,37 @@ def audit_resolved_configs(shapes=None, dtypes=SWEEP_DTYPES,
                             if v.rule != "accumulator-limit")
                         out.extend(contracts.check_grid(
                             kind, _padded_shape(kind, shape, params), params))
+    return checked, out
+
+
+def audit_qr_configs(qr_shapes=QR_SWEEP_SHAPES, shards=QR_SWEEP_SHARDS,
+                     specs=SWEEP_SPECS, splits=SWEEP_SPLITS):
+    """Every (kind, shape) stage tall-skinny QR can dispatch -- per
+    :func:`contracts.qr_stage_shapes`, replicated and per-shard --
+    resolves launchable and grids exactly, across specs and split arms."""
+    dtype = jnp.float32  # QR compute dtype by construction
+    checked, out = 0, []
+    for m, r in qr_shapes:
+        for n_shards in shards:
+            if n_shards > 1 and m % n_shards != 0:
+                continue
+            stages = contracts.qr_stage_shapes(m, r, shards=n_shards)
+            for kind, shape in stages:
+                for spec in specs:
+                    for split in splits:
+                        if kind == "tsm2l" and split != "auto":
+                            continue  # tsm2l has no split dimension
+                        pol = tsmm.GemmPolicy(spec=spec, split=split)
+                        params = ops.resolve_params(
+                            kind, *shape, dtype, pol, interpret=True)
+                        checked += 1
+                        out.extend(v for v in contracts.check_kernel_config(
+                            kind, shape, params, dtype, spec,
+                            max_b=tsmm.GemmPolicy().max_skinny_t)
+                            if v.rule != "accumulator-limit")
+                        out.extend(contracts.check_grid(
+                            kind, _padded_shape(kind, shape, params),
+                            params))
     return checked, out
 
 
@@ -290,6 +338,7 @@ def run_audit(*, bench_path=None, table_path=None, shapes=None) -> dict:
     sections: dict[str, tuple[int, list]] = {
         "candidate-grids": audit_candidate_grids(shapes=shapes),
         "resolved-configs": audit_resolved_configs(shapes=shapes),
+        "qr-resolved": audit_qr_configs(),
         "policies": audit_policies(),
     }
     if table is not None:

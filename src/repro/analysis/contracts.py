@@ -53,6 +53,7 @@ __all__ = [
     "check_backward_policy",
     "check_tuning_record",
     "executor_reduce_ok",
+    "qr_stage_shapes",
     "TSMT_MAX_B",
 ]
 
@@ -323,6 +324,35 @@ def check_grid(kind: str, padded_shape, params) -> list[Violation]:
             f"padded m={m} is not a multiple of splits*block_m="
             f"{s * p['block_m']}"))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Tall-skinny QR stage contracts
+# ---------------------------------------------------------------------------
+
+def qr_stage_shapes(m: int, r: int, *, shards: int = 1
+                    ) -> tuple[tuple[str, tuple[int, int, int]], ...]:
+    """The GEMM-stage (kind, shape) pairs one tall-skinny QR resolves.
+
+    ``repro.linalg``'s CholeskyQR2 factors an ``(m, r)`` operand through
+    exactly two kernel dispatches per pass -- the Gram matrix ``A^T A``
+    (a ``tsmt`` at ``(m, r, r)``) and the ``R^{-1}`` apply (a ``tsm2l``
+    at ``(m, r, r)``); the small Cholesky/triangular solves between them
+    are (r, r) host-shaped and never touch the kernels. ``shards > 1``
+    describes the tree-TSQR variant, whose local factor runs the same two
+    stages on the per-shard row count (``m`` must tile over the shards --
+    the same divisibility the shard_map executors require).
+
+    This is the contract the auditor sweeps (``audit_qr_configs``): every
+    shape the QR subsystem can hand ``ops.resolve_params`` must resolve to
+    a launchable configuration.
+    """
+    if shards < 1 or (shards > 1 and m % shards != 0):
+        raise ValueError(
+            f"qr_stage_shapes: m={m} does not tile over shards={shards} "
+            "(tree-TSQR requires the tall dim to divide the shard count)")
+    m_loc = m // shards
+    return (("tsmt", (m_loc, r, r)), ("tsm2l", (m_loc, r, r)))
 
 
 # ---------------------------------------------------------------------------

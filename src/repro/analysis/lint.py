@@ -25,6 +25,14 @@ directly above -- the reason is mandatory, waivers are grep-able):
 * **RA004 executor-contract** -- every ``register_executor`` call in the
   package must declare its reduce contract (``reduce=``); the implicit
   all-modes default is for out-of-tree back-compat only.
+* **RA005 raw-linalg-qr** -- inside the same ``models//optim//serve/``
+  layers, raw ``jnp.linalg.qr`` / ``jnp.linalg.cholesky`` (and their
+  numpy/scipy spellings) are banned: those call sites orthogonalize
+  tall-skinny operands and must route through ``repro.linalg`` so the
+  Gram/apply GEMMs land on the policy-scoped TSM2X paths. Like RA002 the
+  rule is name-scoped, not shape-scoped -- a genuinely small decomposition
+  is waived with a documented pragma. ``repro/linalg`` itself is exempt by
+  scope: its (r, r) host-shaped factor *is* the sanctioned call site.
 
 Import discipline: stdlib only (ast + pathlib), so the linter runs in a
 bare CI interpreter with no jax present.
@@ -49,6 +57,8 @@ RULES = {
                 "constructor or launch/",
     "executor-contract": "register_executor without an explicit reduce= "
                          "contract declaration",
+    "raw-linalg-qr": "raw qr/cholesky factorization in models//optim//"
+                     "serve/ (route through repro.linalg)",
 }
 
 # Directories (relative to the package root) where RA002 applies: the
@@ -183,6 +193,18 @@ _MATMUL_CALLS = {
     "jax.numpy.dot", "jax.numpy.matmul", "jax.numpy.einsum",
 }
 
+# RA005: the dense-factorization spellings that belong on repro.linalg
+# inside the parameter layers (the operands there are the tall-skinny
+# factors the QR subsystem exists for).
+_LINALG_FACTOR_CALLS = {
+    "jnp.linalg.qr", "jnp.linalg.cholesky",
+    "jax.numpy.linalg.qr", "jax.numpy.linalg.cholesky",
+    "np.linalg.qr", "np.linalg.cholesky",
+    "numpy.linalg.qr", "numpy.linalg.cholesky",
+    "jsp.linalg.cholesky", "jsp_linalg.cholesky",
+    "jax.scipy.linalg.cholesky", "scipy.linalg.cholesky",
+}
+
 
 class _Visitor(ast.NodeVisitor):
     def __init__(self, path: str, rel: str, waivers: dict[int, set[str]]):
@@ -246,6 +268,15 @@ class _Visitor(ast.NodeVisitor):
                     f"{name} over parameter-shaped operand "
                     f"{ast.unparse(hits[0])!r}: route through "
                     "repro.core.tsmm (or waive with a documented pragma)")
+
+        if self.check_param_matmul and name in _LINALG_FACTOR_CALLS:
+            self._emit(
+                "raw-linalg-qr", node,
+                f"{name} in a parameter layer: orthogonalization/"
+                "factorization of tall operands must route through "
+                "repro.linalg (qr/tsqr/tree_tsqr) so the Gram and apply "
+                "GEMMs hit the policy-scoped kernels (or waive with a "
+                "documented pragma)")
 
         if name in ("os.getenv", "getenv"):
             self._check_env_read(node)

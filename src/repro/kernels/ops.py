@@ -481,3 +481,17 @@ _ceil_mult = contracts.ceil_mult
 tsm2r_ref = ref.tsm2r_ref
 tsm2l_ref = ref.tsm2l_ref
 tsmt_ref = ref.tsmt_ref
+
+
+def tsqr(a: jnp.ndarray, *, policy=None, passes: int | None = None,
+         shift_rel: float | None = None):
+    """Tall-skinny QR (CholeskyQR2) built on :func:`tsmt` + :func:`tsm2l`.
+
+    Thin re-export of :func:`repro.linalg.tsqr` for symmetry with the
+    kernel entries; see that module for numerics and the distributed
+    ``tree_tsqr`` variant. Imported lazily -- ``repro.linalg`` consumes
+    the dispatcher above, so a top-level import would be cyclic.
+    """
+    from repro import linalg
+    return linalg.tsqr(a, policy=policy, passes=passes,
+                       shift_rel=shift_rel)

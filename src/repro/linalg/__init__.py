@@ -1,0 +1,16 @@
+"""Tall-skinny linear algebra on the TSM2X kernel paths.
+
+* :func:`qr` / :func:`tsqr` -- CholeskyQR2 factorization of a replicated
+  ``(m, r)`` operand (Gram via ``tsmt``, apply via ``tsm2l``, shift-
+  regularized fallback, differentiable via ``custom_vjp``).
+* :func:`tree_tsqr` -- the distributed variant for row-sharded operands
+  inside a caller's shard_map (small-R butterfly/gather tree, psum-free).
+
+Also re-exported as ``repro.kernels.ops.tsqr`` for symmetry with the
+kernel entries.
+"""
+
+from repro.linalg.tsqr import DEFAULT_PASSES, qr, tsqr
+from repro.linalg.tree_tsqr import tree_tsqr
+
+__all__ = ["qr", "tsqr", "tree_tsqr", "DEFAULT_PASSES"]

@@ -1,0 +1,108 @@
+"""Distributed tall-skinny QR: per-shard CholeskyQR2 + a small-R tree.
+
+Runs *inside the caller's shard_map* over a named mesh axis (the same
+contract as ``powersgd.compress_one_sharded``): each rank factors its own
+``(m/N, r)`` row block locally on the TSM2X kernel paths, then only the
+tiny ``(r, r)`` ``R`` factors travel -- psum-free and log-depth -- so the
+row-sharded ``Q`` factor never materializes replicated. This composes
+with the PR 4 ``psum_scatter`` executors: a consumer that keeps its
+operand row-sharded (PowerSGD's scattered ``Q`` state) feeds this
+directly and gets a sharded orthonormal basis back in the same layout.
+
+Two reduction schedules over the R factors (``reduce=``):
+
+* ``"butterfly"`` -- an all-reduce-shaped TSQR: at level ``l`` each rank
+  ``ppermute``-swaps its current ``R`` with partner ``i XOR 2^l``, both
+  sides stack the pair lower-rank-first and take the same small
+  Householder QR, so every rank finishes every level with an *identical*
+  ``R`` and its own ``(r, r)`` Q-block, accumulated into a transform
+  ``T``. ``log2(N)`` rounds of ``r*r`` exchanges, no psum, no gather.
+  Requires a power-of-two axis size.
+* ``"gather"`` -- direct TSQR (the mrtsqr lineage): ``all_gather`` the N
+  small ``R`` factors, one ``(N*r, r)`` QR, each rank slices its own
+  Q-block. One collective, fine at small N or non-power-of-two sizes.
+
+``reduce="auto"`` picks butterfly exactly when the axis size is a power
+of two. Every small QR is sign-normalized (non-negative R diagonal), and
+the local Cholesky factors carry that convention already, so the global
+``R`` -- and therefore ``Q = Q_local @ T`` -- matches the replicated
+:func:`repro.linalg.tsqr` oracle up to rounding, not up to column signs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import tsmm
+from repro.kernels import compat
+from repro.linalg.tsqr import tsqr as _local_tsqr
+
+__all__ = ["tree_tsqr"]
+
+_REDUCES = ("auto", "butterfly", "gather")
+
+
+def _small_qr(x: jnp.ndarray):
+    """Reduced QR of a stacked-R block, sign-fixed to R diag >= 0."""
+    q, r = jnp.linalg.qr(x)
+    s = jnp.where(jnp.diag(r) < 0, -1.0, 1.0).astype(x.dtype)
+    return q * s[None, :], r * s[:, None]
+
+
+def tree_tsqr(a: jnp.ndarray, *, axis: str,
+              policy: tsmm.GemmPolicy | None = None,
+              passes: int | None = None, reduce: str = "auto",
+              shift_rel: float | None = None):
+    """Tall-skinny QR of the row-sharded global operand whose local block
+    is ``a (m/N, r)``; call inside a shard_map over mesh axis ``axis``.
+
+    Returns ``(q_local, r)``: this rank's ``(m/N, r)`` row block of the
+    global orthonormal ``Q`` (in ``a.dtype``) and the replicated global
+    ``(r, r)`` upper-triangular ``R`` (f32, non-negative diagonal).
+
+    The local factor is :func:`repro.linalg.tsqr` under the caller's
+    policy forced to ``shard_map="local"`` (we are already per-shard --
+    the dispatcher must not re-wrap), so both local GEMM stages stay on
+    the tsmt/tsm2l executors; ``passes``/``shift_rel`` pass through.
+    """
+    if reduce not in _REDUCES:
+        raise ValueError(
+            f"tree_tsqr reduce={reduce!r}: valid values are {_REDUCES}")
+    p = policy if policy is not None else tsmm.current_policy()
+    if p.shard_map != "local":
+        p = p.with_(shard_map="local")
+    q0, r0 = _local_tsqr(a, policy=p, passes=passes, shift_rel=shift_rel)
+    q0 = q0.astype(jnp.float32)
+    size = int(lax.psum(1, axis))
+    if size == 1:
+        return q0.astype(a.dtype), r0
+    r_dim = a.shape[-1]
+    if reduce == "auto":
+        reduce = "butterfly" if size & (size - 1) == 0 else "gather"
+    idx = lax.axis_index(axis)
+
+    if reduce == "butterfly":
+        if size & (size - 1) != 0:
+            raise ValueError(
+                f"tree_tsqr reduce='butterfly' needs a power-of-two axis "
+                f"size; axis {axis!r} has {size} shards (use 'gather')")
+        t_acc = None
+        r_cur = r0
+        for level in range(size.bit_length() - 1):
+            bit = 1 << level
+            perm = [(i, i ^ bit) for i in range(size)]
+            r_other = lax.ppermute(r_cur, axis, perm)
+            lower = (idx & bit) == 0
+            top = jnp.where(lower, r_cur, r_other)
+            bot = jnp.where(lower, r_other, r_cur)
+            qs, r_cur = _small_qr(jnp.concatenate([top, bot], axis=0))
+            blk = jnp.where(lower, qs[:r_dim], qs[r_dim:])
+            t_acc = blk if t_acc is None else t_acc @ blk
+    else:
+        rs = compat.all_gather(r0, axis)                 # (N*r, r)
+        qs, r_cur = _small_qr(rs)
+        t_acc = lax.dynamic_slice_in_dim(qs, idx * r_dim, r_dim, axis=0)
+
+    q = tsmm.tsmm(q0, t_acc, policy=p)                   # TSM2L shape
+    return q.astype(a.dtype), r_cur

@@ -1,0 +1,190 @@
+"""CholeskyQR2 tall-skinny QR on the TSM2X kernel paths.
+
+The factorization is pure TSM2X machinery (ROADMAP's lead open item, and
+the regime Thies & Rohrig-Zollner show CholeskyQR-class methods dominate
+Householder QR in): per pass,
+
+    G = A^T A            # (r, r)  -- ``tsmt``, the split-K headline shape
+    R = chol(G)^T        # (r, r)  -- host-shaped, negligible
+    Q = A R^{-1}         # (m, r)  -- ``tsm2l`` (tiny contraction)
+
+One Cholesky pass loses orthogonality like ``u * cond(A)^2``; the second
+pass (CholeskyQR2, Yamamoto et al.) runs the same two GEMMs on the nearly
+orthonormal ``Q`` and recovers ``‖QᵀQ − I‖ ~ u`` whenever the first pass
+got ``cond(Q1)`` down to O(1). For operands beyond ``cond ~ 1/sqrt(u)``
+the first Gram factor is numerically singular; each pass then falls back
+to a shift-regularized Cholesky (``G + s*I``, shifted CholeskyQR a la
+Fukaya et al.) selected via ``jnp.where`` so the fallback is trace-safe.
+A shifted pass only caps -- not kills -- the conditioning, so the default
+``DEFAULT_PASSES`` includes one recovery pass beyond classic QR2 and f32
+operands stay ``‖QᵀQ − I‖∞ <= 1e-4`` through ``cond ~ 1e6``.
+
+Both GEMM stages go through :mod:`repro.core.tsmm`, so the lexically
+scoped :class:`~repro.core.tsmm.GemmPolicy` applies (executor selection,
+shard_map composition, the dispatch spy, ``verify_contracts``), and
+out-of-regime shapes degrade to the dense path instead of failing. The
+small ``(r, r)`` Cholesky/triangular solves are host-shaped and exempt
+from the ``raw-linalg-qr`` lint rule by scope (the rule guards
+``models//optim//serve/``, not this subsystem).
+
+``tsqr``/``qr`` carry a ``custom_vjp`` (Liao-style QR adjoint), so
+PowerSGD's orthogonalization stays differentiable and the cotangent GEMMs
+(``dQᵀQ`` is a ``tsmt``; the two ``R^{-T}`` applies are ``tsm2l``-shaped)
+re-dispatch tall-skinny under :func:`tsmm.backward_policy`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsp_linalg
+
+from repro.core import tsmm
+
+__all__ = ["tsqr", "qr", "DEFAULT_PASSES"]
+
+# Two classic CholeskyQR2 passes plus one recovery pass: when the shift
+# fallback engages in pass 1 (cond(A) beyond ~1/sqrt(u)), pass 2's input
+# still carries cond(Q1) ~ 1/sqrt(shift_rel) ~ 1e2, leaving pass-2
+# orthogonality ~ u/shift_rel ~ 1e-3 -- one more pass lands it at ~u.
+# Well-conditioned operands simply converge a pass early; each extra pass
+# is one bandwidth-bound tsmt+tsm2l pair. Callers on known-benign inputs
+# (PowerSGD's P factors) can pass ``passes=2``.
+DEFAULT_PASSES = 3
+
+
+def _wide_dtype():
+    """float64 when x64 is enabled, else float32 (canonicalized)."""
+    return jax.dtypes.canonicalize_dtype(jnp.float64)
+
+
+def _default_shift_rel(m: int, r: int) -> float:
+    """Shift (relative to the unit diagonal of the scaled Gram) that
+    dominates the f32 Gram accumulation noise ``~ sqrt(m) * u`` while
+    capping the post-shift conditioning at ``~ 1/sqrt(shift_rel)``."""
+    eps = float(jnp.finfo(jnp.float32).eps)
+    return 10.0 * float(m * r) ** 0.5 * eps
+
+
+def _small_cholesky(g: jnp.ndarray, shift_rel: float):
+    """Compensated Cholesky of the (r, r) Gram: Jacobi (diagonal) scaling
+    conditions the factorization when x64 is unavailable, the factor is
+    computed in f64 when it is, and a shift-regularized retry is selected
+    via ``jnp.where`` whenever the unshifted factor came back non-finite
+    (numerically singular / indefinite Gram). Returns the *lower* factor
+    ``L`` with ``G ~ L Lᵀ`` in ``g.dtype``."""
+    r = g.shape[0]
+    eye = jnp.eye(r, dtype=g.dtype)
+    d = jnp.sqrt(jnp.maximum(jnp.diag(g), jnp.finfo(g.dtype).tiny))
+    gs = g / (d[:, None] * d[None, :])
+    wide = _wide_dtype()
+    l_plain = jnp.linalg.cholesky(gs.astype(wide))
+    ok = jnp.all(jnp.isfinite(l_plain))
+    l_shift = jnp.linalg.cholesky((gs + shift_rel * eye).astype(wide))
+    l_scaled = jnp.where(ok, l_plain, l_shift).astype(g.dtype)
+    return d[:, None] * l_scaled
+
+
+def _chol_pass(q: jnp.ndarray, policy, shift_rel: float):
+    """One CholeskyQR pass: returns (Q_next, R_factor)."""
+    r_dim = q.shape[1]
+    g = tsmm.tsmm_t(q, q, policy=policy)                       # TSMT
+    g = 0.5 * (g + g.T)
+    r_fac = _small_cholesky(g, shift_rel).T                    # upper
+    r_inv = jsp_linalg.solve_triangular(
+        r_fac, jnp.eye(r_dim, dtype=r_fac.dtype), lower=False)
+    return tsmm.tsmm(q, r_inv, policy=policy), r_fac           # TSM2L
+
+
+def _factor(a: jnp.ndarray, passes: int, policy, shift_rel: float | None):
+    m, r_dim = a.shape
+    q = a.astype(jnp.float32)
+    srel = shift_rel if shift_rel is not None else _default_shift_rel(
+        m, r_dim)
+    r_acc = None
+    for _ in range(passes):
+        q, r_fac = _chol_pass(q, policy, srel)
+        r_acc = r_fac if r_acc is None else r_fac @ r_acc
+    return q, r_acc
+
+
+# ``passes``/``policy``/``shift_rel`` ride the nondiff slots (GemmPolicy is
+# frozen+hashable by contract), so the backward re-enters the dispatcher
+# under the policy captured at forward-trace time -- same convention as the
+# kernel ops' own custom_vjp rules.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _qr_diff(a, passes, policy, shift_rel):
+    return _factor(a, passes, policy, shift_rel)
+
+
+def _qr_fwd(a, passes, policy, shift_rel):
+    q, r = _factor(a, passes, policy, shift_rel)
+    return (q, r), (q, r)
+
+
+def _qr_bwd(passes, policy, shift_rel, res, cts):
+    del passes, shift_rel
+    q, r = res
+    dq, dr = cts
+    bp = tsmm.backward_policy(policy)
+    # QR adjoint for the reduced factorization (m >= r):
+    #   M  = R dRᵀ − dQᵀ Q
+    #   dA = (dQ + Q copyltu(M)) R^{-T}
+    # dQᵀQ is the huge-reduction product -> tsmt; grouping the two small
+    # (r, r) factors first leaves exactly two tall applies -> tsm2l.
+    m_mat = r @ dr.T - tsmm.tsmm_t(dq, q, policy=bp)
+    low = jnp.tril(m_mat, -1)
+    copyltu = low + low.T + jnp.diag(jnp.diag(m_mat))
+    rinv_t = jsp_linalg.solve_triangular(
+        r, jnp.eye(r.shape[0], dtype=r.dtype), lower=False).T
+    da = (tsmm.tsmm(dq, rinv_t, policy=bp)
+          + tsmm.tsmm(q, copyltu @ rinv_t, policy=bp))
+    return (da,)
+
+
+_qr_diff.defvjp(_qr_fwd, _qr_bwd)
+
+
+def tsqr(a: jnp.ndarray, *, policy: tsmm.GemmPolicy | None = None,
+         passes: int | None = None, shift_rel: float | None = None):
+    """Tall-skinny QR via CholeskyQR2: ``A (m, r) -> (Q, R)`` with
+    ``Q`` orthonormal ``(m, r)`` in ``a.dtype`` and ``R`` upper-triangular
+    ``(r, r)`` f32 with non-negative diagonal (the factorization is unique
+    under that sign convention, which is what makes oracle comparisons and
+    the tree variant's cross-shard agreement exact up to rounding).
+
+    Compute runs in f32 regardless of input dtype (bf16 operands are
+    upcast before the Gram stage -- a bf16 Gram cannot support any useful
+    orthogonality target). Differentiable; both GEMM stages and their
+    cotangents dispatch through :mod:`repro.core.tsmm` under ``policy``
+    (default: the active ``tsmm.policy(...)`` scope).
+
+    ``passes``: CholeskyQR passes (default :data:`DEFAULT_PASSES`).
+    ``shift_rel``: override the relative Cholesky regularization shift
+    used when a Gram factor comes back numerically singular.
+    """
+    if a.ndim != 2:
+        raise ValueError(f"tsqr expects a 2-D (m, r) operand; got {a.shape}")
+    m, r_dim = a.shape
+    if r_dim == 0 or m < r_dim:
+        raise ValueError(
+            f"tsqr is the tall-skinny factorization (m >= r >= 1); got "
+            f"shape {a.shape}")
+    n_passes = DEFAULT_PASSES if passes is None else int(passes)
+    if n_passes < 1:
+        raise ValueError(f"tsqr needs passes >= 1; got {passes}")
+    p = policy if policy is not None else tsmm.current_policy()
+    if shift_rel is not None:
+        shift_rel = float(shift_rel)
+    # The f32 upcast sits OUTSIDE the custom_vjp (its transpose casts the
+    # cotangent back), so the rule only ever sees f32 operands.
+    q, r = _qr_diff(a.astype(jnp.float32), n_passes, p, shift_rel)
+    return q.astype(a.dtype), r
+
+
+def qr(a: jnp.ndarray, *, policy: tsmm.GemmPolicy | None = None,
+       passes: int | None = None, shift_rel: float | None = None):
+    """Alias of :func:`tsqr` under the conventional name."""
+    return tsqr(a, policy=policy, passes=passes, shift_rel=shift_rel)

@@ -49,8 +49,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import linalg
 from repro.core import tsmm
 from repro.kernels import compat
+
+_ORTH_MODES = ("gram_schmidt", "tsqr")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +61,21 @@ class PowerSGDConfig:
     rank: int = 4
     min_size: int = 256 * 256      # params smaller than this stay dense
     ef_decay: float = 1.0          # error-feedback retention
+    # How the P factor is orthonormalized each step:
+    #   "gram_schmidt" -- the unrolled classical GS below (default; the
+    #     historical behavior, now with a degenerate-column reseed guard).
+    #   "tsqr" -- repro.linalg CholeskyQR2, i.e. the orthogonalization
+    #     itself runs on the TSM2X kernels (Gram=tsmt, apply=tsm2l) and
+    #     the sharded variant keeps even this stage row-sharded via
+    #     tree-TSQR. Both produce the unique positive-diagonal QR basis,
+    #     so the knob is an implementation choice, not a protocol change.
+    orth: str = "gram_schmidt"
+
+    def __post_init__(self):
+        if self.orth not in _ORTH_MODES:
+            raise ValueError(
+                f"unknown PowerSGDConfig orth {self.orth!r}: valid values "
+                f"are {', '.join(_ORTH_MODES)}")
 
 
 def _compressible(p) -> bool:
@@ -76,14 +94,42 @@ def init(cfg: PowerSGDConfig, params, key):
 
 
 def _orthonormalize(m):
-    """Gram-Schmidt on skinny (d, r): r is tiny so the loop unrolls."""
+    """Gram-Schmidt on skinny (d, r): r is tiny so the loop unrolls.
+
+    Degenerate columns -- zero, or numerically dependent on the columns
+    already processed (the projection residual loses >= ~4 digits of the
+    column's original norm) -- are replaced by a deterministic fresh
+    direction: a fixed per-column-index PRNG draw, projected against the
+    basis built so far. The old ``1e-8`` norm floor instead *normalized
+    the rounding noise*, silently emitting near-duplicate columns that
+    broke the orthonormality every downstream step assumes (P^T P = I is
+    what makes ``approx = P Q^T`` a projection). Selection is via
+    ``jnp.where`` so the guard is trace-safe and branch-free.
+    """
+    d = m.shape[0]
+    tiny = jnp.asarray(jnp.finfo(jnp.float32).tiny, m.dtype)
     cols = []
     for i in range(m.shape[1]):
         c = m[:, i]
+        norm0 = jnp.linalg.norm(c)
+        fresh = jax.random.normal(jax.random.PRNGKey(i), (d,), m.dtype)
         for prev in cols:
             c = c - jnp.dot(prev, c) * prev
-        cols.append(c / jnp.maximum(jnp.linalg.norm(c), 1e-8))
+            fresh = fresh - jnp.dot(prev, fresh) * prev
+        resid = jnp.linalg.norm(c)
+        degenerate = resid <= 1e-4 * norm0 + tiny
+        unit = c / jnp.maximum(resid, tiny)
+        fresh_unit = fresh / jnp.maximum(jnp.linalg.norm(fresh), tiny)
+        cols.append(jnp.where(degenerate, fresh_unit, unit))
     return jnp.stack(cols, axis=1)
+
+
+def _orth_factor(cfg: PowerSGDConfig, p, policy=None):
+    """Orthonormalize the replicated P factor per ``cfg.orth``."""
+    if cfg.orth == "tsqr":
+        q, _ = linalg.tsqr(p, policy=policy)
+        return q
+    return _orthonormalize(p)
 
 
 def compress_one(cfg: PowerSGDConfig, grad, st, *, psum=None, policy=None,
@@ -102,7 +148,7 @@ def compress_one(cfg: PowerSGDConfig, grad, st, *, psum=None, policy=None,
     p = tsmm.tsmm(g, st["q"], policy=policy, interpret=interpret)   # TSM2R
     if psum:
         p = psum(p)
-    p = _orthonormalize(p)
+    p = _orth_factor(cfg, p, policy=policy)
     q = tsmm.tsmm_t(g, p, policy=policy, interpret=interpret)       # TSMT
     if psum:
         q = psum(q)
@@ -167,8 +213,20 @@ def compress_one_sharded(cfg: PowerSGDConfig, grad, st, *, axis,
               else st["q"])
     g = grad.astype(jnp.float32) + st["err"] * cfg.ef_decay
     p = tsmm.tsmm(g, q_prev, policy=p_loc)                      # TSM2R
-    p = lax.pmean(p, axis)
-    p = _orthonormalize(p)
+    if cfg.orth == "tsqr" and p.shape[0] % size == 0:
+        # Keep even the orthogonalization row-sharded: scatter the mean
+        # of the local P projections (same bytes as the pmean's scatter
+        # half), factor with tree-TSQR (only (r, r) R blocks travel),
+        # gather the orthonormal basis back for the Q projection, which
+        # needs full P rows. Equal to pmean + replicated tsqr up to
+        # rounding, with the O(d1 r^2) orthogonalization work divided
+        # over the shards.
+        p_shard = compat.psum_scatter(p, axis) / size
+        p_orth, _ = linalg.tree_tsqr(p_shard, axis=axis, policy=p_loc)
+        p = compat.all_gather(p_orth, axis)
+    else:
+        p = lax.pmean(p, axis)
+        p = _orth_factor(cfg, p, policy=p_loc)
     q_local = tsmm.tsmm_t(g, p, policy=p_loc)                   # TSMT
     if q_sharded:
         q_new = compat.psum_scatter(q_local, axis) / size       # sharded

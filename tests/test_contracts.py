@@ -146,6 +146,30 @@ def test_scatter_divisibility_contract():
         "psum-scatter-divisibility"]
 
 
+def test_qr_stage_shapes_contract():
+    # replicated: two stages, both (m, r, r), Gram first
+    assert contracts.qr_stage_shapes(8192, 16) == (
+        ("tsmt", (8192, 16, 16)), ("tsm2l", (8192, 16, 16)))
+    # tree-TSQR: the same stages on the per-shard row count
+    assert contracts.qr_stage_shapes(8192, 16, shards=4) == (
+        ("tsmt", (2048, 16, 16)), ("tsm2l", (2048, 16, 16)))
+    with pytest.raises(ValueError, match="tile"):
+        contracts.qr_stage_shapes(100, 8, shards=3)
+    with pytest.raises(ValueError, match="shards"):
+        contracts.qr_stage_shapes(100, 8, shards=0)
+
+
+def test_audit_qr_sweep_clean_and_counts():
+    """The qr-resolved sweep covers every stage of every (shape, shards)
+    cell it declares, and the committed resolver passes all of them."""
+    checked, vios = audit.audit_qr_configs()
+    assert vios == [], vios
+    # every declared cell that tiles contributes both stages x spec arms
+    cells = sum(1 for m, r in audit.QR_SWEEP_SHAPES
+                for s in audit.QR_SWEEP_SHARDS if m % s == 0)
+    assert checked >= cells * 2, (checked, cells)
+
+
 def test_executor_reduce_ok():
     assert contracts.executor_reduce_ok(("psum", "none"), "psum")
     assert not contracts.executor_reduce_ok(("psum_scatter",), "psum")
@@ -359,7 +383,7 @@ def test_audit_clean_on_committed_tree():
     # every section actually ran against the committed artifacts
     assert set(report["sections"]) >= {"candidate-grids", "resolved-configs",
                                        "policies", "tuning-table",
-                                       "bench-dispatch"}
+                                       "bench-dispatch", "qr-resolved"}
 
 
 def test_audit_cli_strict_and_json(tmp_path, capsys):

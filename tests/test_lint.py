@@ -229,6 +229,63 @@ def test_syntax_error_is_reported_not_raised():
 
 
 # ---------------------------------------------------------------------------
+# RA005: raw qr/cholesky factorizations in the parameter layers
+# ---------------------------------------------------------------------------
+
+def test_raw_linalg_qr_flagged_in_optim():
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def orth(p):
+            q, _ = jnp.linalg.qr(p)
+            return q
+        """, rel="optim/powersgd.py")
+    assert _rules(errs) == ["raw-linalg-qr"]
+
+
+def test_raw_cholesky_spellings_flagged():
+    errs = _lint("""\
+        import numpy as np
+        from jax.scipy import linalg as jsp_linalg
+
+        def f(g):
+            a = np.linalg.cholesky(g)
+            b = jsp_linalg.cholesky(g)
+            return a, b
+        """, rel="serve/decode.py")
+    assert _rules(errs) == ["raw-linalg-qr", "raw-linalg-qr"]
+
+
+def test_repro_linalg_call_not_flagged():
+    errs = _lint("""\
+        from repro import linalg
+
+        def orth(p):
+            q, _ = linalg.tsqr(p)
+            return q
+        """, rel="optim/powersgd.py")
+    assert errs == []
+
+
+def test_raw_linalg_qr_exempt_outside_scoped_dirs():
+    src = "import jax.numpy as jnp\nq = jnp.linalg.qr(x)\n"
+    assert _lint(src, rel="linalg/tsqr.py") == []
+    assert _lint(src, rel="analysis/audit.py") == []
+
+
+def test_raw_linalg_qr_pragma_waiver():
+    errs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(b):
+            # repro: allow-raw-linalg-qr ((k, k) host-shaped factor, not
+            # a tall-skinny operand)
+            return jnp.linalg.qr(b)
+        """, rel="models/layers.py")
+    assert errs == []
+
+
+# ---------------------------------------------------------------------------
 # Clean tree
 # ---------------------------------------------------------------------------
 

@@ -156,6 +156,43 @@ def test_powersgd_small_params_stay_dense():
     assert m["powersgd_compression"] == pytest.approx(1.0)
 
 
+def test_orthonormalize_rank_deficient_columns():
+    """The degenerate-column guard: duplicate and zero columns come back
+    as fresh orthonormal directions instead of normalized rounding noise
+    (the pre-guard behavior silently broke P^T P = I, which is what makes
+    ``approx = P Q^T`` a projection)."""
+    key = jax.random.PRNGKey(11)
+    m = jax.random.normal(key, (512, 6))
+    m = m.at[:, 3].set(m[:, 1])          # exact duplicate
+    m = m.at[:, 5].set(0.0)              # zero column
+    q = powersgd._orthonormalize(m)
+    eye_err = float(jnp.max(jnp.abs(q.T @ q - jnp.eye(6))))
+    assert eye_err <= 1e-4, eye_err
+    # healthy columns are untouched up to normalization (span preserved)
+    col0 = m[:, 0] / jnp.linalg.norm(m[:, 0])
+    np.testing.assert_allclose(np.asarray(q[:, 0]), np.asarray(col0),
+                               atol=1e-5)
+    # the reseed draws are fixed per column index: fully deterministic
+    q2 = powersgd._orthonormalize(m)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+
+
+def test_powersgd_orth_config():
+    with pytest.raises(ValueError, match="orth"):
+        powersgd.PowerSGDConfig(orth="householder")
+    # orth="tsqr" runs the same protocol, just orthogonalizing on the
+    # kernel paths: a rank-r gradient still reconstructs near-exactly
+    cfg = powersgd.PowerSGDConfig(rank=4, min_size=0, orth="tsqr")
+    key = jax.random.PRNGKey(12)
+    u = jax.random.normal(key, (512, 4))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (300, 4))
+    g = {"w": u @ v.T}
+    st_ = powersgd.init(cfg, g, jax.random.PRNGKey(2))
+    out, _, _ = powersgd.compress_tree(cfg, g, st_, interpret=True)
+    rel = np.linalg.norm(out["w"] - g["w"]) / np.linalg.norm(g["w"])
+    assert rel < 1e-3
+
+
 # ---------------------------------------------------------------------------
 # Data pipeline
 # ---------------------------------------------------------------------------

@@ -136,6 +136,39 @@ np.testing.assert_allclose(np.asarray(q_s), np.asarray(st_o["q"]),
                            rtol=1e-4, atol=1e-4)
 assert {s.data.shape for s in q_s.addressable_shards} == {(d2 // 2, cfg.rank)}
 
+# --- PowerSGD orth="tsqr": tree-TSQR orthogonalization == oracle ---------
+# Same protocol with the P factor orthogonalized by the distributed
+# tree-TSQR (psum_scatter + per-shard CholeskyQR2) instead of pmean +
+# replicated Gram-Schmidt/tsqr. The replicated oracle uses tsqr too, so
+# sharded and oracle must agree numerically, and the whole compress must
+# stay on the kernel executors (the collectives are raw lax/compat
+# calls, so every dispatch event is a per-shard kernel execution).
+cfg_qr = powersgd.PowerSGDConfig(rank=4, min_size=0, orth="tsqr")
+approx_oq, st_oq = powersgd.compress_one(cfg_qr, grads.mean(0), state0["w"])
+
+
+def body_qr(g_local):
+    st = powersgd.shard_state(state0, "data")["w"]
+    approx, st2 = powersgd.compress_one_sharded(cfg_qr, g_local[0], st, axis="data")
+    return approx, st2["q"]
+
+
+f_qr = compat.shard_map(
+    body_qr,
+    mesh=mesh,
+    in_specs=(P("data", None, None),),
+    out_specs=(P(None, None), P("data", None)),
+)
+with mesh:
+    with tsmm.record_dispatches() as log:
+        approx_sq, q_sq = jax.jit(f_qr)(grads)
+np.testing.assert_allclose(np.asarray(approx_sq), np.asarray(approx_oq),
+                           rtol=1e-4, atol=1e-4)
+np.testing.assert_allclose(np.asarray(q_sq), np.asarray(st_oq["q"]),
+                           rtol=1e-4, atol=1e-4)
+assert {s.data.shape for s in q_sq.addressable_shards} == {(d2 // 2, cfg_qr.rank)}
+assert {e.executor for e in log} == {"pallas-tpu"}, log
+
 # --- split reduction per shard: collective contracts unchanged -----------
 # GemmPolicy.split composes with reduce=: partials are summed inside each
 # shard's kernel epilogue, so the psum arm stays replicated and the
