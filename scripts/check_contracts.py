@@ -2,11 +2,17 @@
 """CI entry for the static-analysis layer: contract audit + repo linter.
 
 Runs ``repro.analysis.audit --strict`` (kernel-launch contracts over the
-full configuration space, committed tuning table, bench dispatch arms)
-and ``repro.analysis.lint`` (repo invariant linter) in one process; exits
-non-zero if either finds a violation. Pass-through flags go to the
-auditor, so ``scripts/check_contracts.py --json report.json`` artifacts
-the machine-readable report.
+full configuration space, the kernel-dataflow verifier, committed tuning
+table, bench dispatch arms) and ``repro.analysis.lint`` (repo invariant
+linter) in one process; exits non-zero if either finds a violation.
+Pass-through flags go to the auditor, so ``scripts/check_contracts.py
+--json report.json`` artifacts the machine-readable report.
+
+``--dataflow-json PATH`` additionally extracts the ``kernel-dataflow``
+section (grid-race / bounds / guard verification, including which grids
+were corner-sampled -- see ``repro.analysis.kernel_verify``) into its own
+artifact, so a dataflow failure is inspectable without digging through
+the full report.
 
 Equivalent to::
 
@@ -16,6 +22,7 @@ Equivalent to::
 
 from __future__ import annotations
 
+import json
 import pathlib
 import sys
 
@@ -26,9 +33,23 @@ from repro.analysis import audit, lint  # noqa: E402
 
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
+    dataflow_path = None
+    if "--dataflow-json" in argv:
+        i = argv.index("--dataflow-json")
+        dataflow_path = pathlib.Path(argv[i + 1])
+        del argv[i:i + 2]
+        if "--json" not in argv:
+            argv += ["--json", "audit-report.json"]
     if "--strict" not in argv:
         argv.append("--strict")
     audit_rc = audit.main(argv)
+    if dataflow_path is not None:
+        report_path = pathlib.Path(argv[argv.index("--json") + 1])
+        report = json.loads(report_path.read_text())
+        section = report["sections"]["kernel-dataflow"]
+        dataflow_path.write_text(json.dumps(
+            {"schema": report["schema"], "section": "kernel-dataflow",
+             **section}, indent=2, sort_keys=True) + "\n")
     lint_rc = lint.main([])
     return audit_rc or lint_rc
 

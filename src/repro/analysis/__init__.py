@@ -1,6 +1,6 @@
 """Static analysis for the TSM2X framework: decidable-offline guarantees.
 
-Two layers, both consumed by CI (the ``analysis`` job) and by tests:
+Four layers, all consumed by CI (the ``analysis`` job) and by tests:
 
 * :mod:`repro.analysis.contracts` -- the single source of truth for every
   kernel-feasibility predicate the runtime choosers enforce (VMEM
@@ -15,9 +15,19 @@ Two layers, both consumed by CI (the ``analysis`` job) and by tests:
   committed tuning tables, reachable GemmPolicy combinations, the
   executor registry and the benchmark baseline's dispatch-sanity arms
   against the contracts, emitting a machine-readable violations report.
+* :mod:`repro.analysis.kernel_verify` -- the grid-dataflow verifier:
+  captures every ``pallas_call`` the committed kernels construct (via the
+  ``kernels.compat`` recording shim under ``jax.eval_shape``) and proves
+  write-disjointness across ``parallel`` grid dims, ``pl.when``
+  init/flush guard discipline on revisited blocks, index-map bounds, and
+  f32 accumulator dtype -- the invariants that corrupt results on real
+  TPU while interpret-mode tests stay green. Runs as the auditor's
+  ``kernel-dataflow`` section; imported lazily (it pulls in the kernel
+  modules).
 * :mod:`repro.analysis.lint` -- AST-based repo invariant linter (layer
   boundaries: ``jax._src`` confinement, tsmm-routed parameter matmuls,
-  env reads, executor reduce-contract declarations).
+  env reads, executor reduce-contract declarations, explicit
+  ``dimension_semantics`` on every kernel launch).
 """
 
 from repro.analysis import contracts

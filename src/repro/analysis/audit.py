@@ -32,6 +32,14 @@ Sections (one report entry each):
   configuration under every spec/split arm. QR compute is f32 by
   construction (bf16 operands are upcast before the Gram), so the sweep
   pins f32.
+* ``kernel-dataflow`` -- the grid-dataflow verifier
+  (``analysis.kernel_verify``): every unique (kernel, padded shape,
+  params, dtype) the resolver sweep reaches -- all five kernels plus the
+  ``reduce.py`` split-partials epilogue -- is captured abstractly and
+  checked for write races, revisit init/flush guard discipline,
+  index-map bounds, f32 accumulators, and launch-metadata drift. The
+  section's report entry additionally lists configs whose grids were
+  corner-sampled rather than exhaustively enumerated.
 
 CLI::
 
@@ -51,15 +59,17 @@ import sys
 
 import jax.numpy as jnp
 
-from repro.analysis import contracts
+from repro.analysis import contracts, kernel_verify
 from repro.core import autotune, perf_model, tsmm
 from repro.kernels import ops
+from repro.kernels import reduce as kreduce
 
 __all__ = [
     "AUDIT_SCHEMA",
     "SWEEP_SHAPES",
     "audit_candidate_grids",
     "audit_resolved_configs",
+    "audit_kernel_dataflow",
     "audit_qr_configs",
     "audit_tuning_table",
     "audit_policies",
@@ -163,10 +173,31 @@ def audit_candidate_grids(shapes=None, dtypes=SWEEP_DTYPES,
     return checked, out
 
 
+def _epilogue_config(kind, padded, params, spec):
+    """The split-partials epilogue launch a resolved split config implies:
+    ``("reduce", (S, rows, cols), {"block_r": ...})``, or None when
+    ``reduce_partials`` takes the fused jnp.sum path. Mirrors the
+    ``ops._tsm*_impl`` call sites exactly (rows = the padded dim the
+    partials stack over, block_r = that dim's block)."""
+    s = dict(params).get("splits", 1)
+    if s <= 1 or kind == "tsm2l":
+        return None
+    rows = padded[0] if kind == "tsm2r" else padded[1]
+    cols = padded[2]
+    blk = params["block_m"] if kind == "tsm2r" else params["block_a"]
+    br = kreduce.epilogue_block_r(
+        s, rows, cols, block_r=blk,
+        vmem_budget=int(contracts.vmem_budget(spec)))
+    if br is None:
+        return None
+    return ("reduce", (s, rows, cols), {"block_r": br})
+
+
 def audit_resolved_configs(shapes=None, dtypes=SWEEP_DTYPES,
                            specs=SWEEP_SPECS, splits=SWEEP_SPLITS):
     """Analytic picks and ``ops.resolve_params`` outputs (every policy
-    split arm) are launchable, and their padded shapes grid exactly."""
+    split arm) are launchable, and their padded shapes grid exactly --
+    including the reduce epilogue grid each split config implies."""
     shapes = shapes or SWEEP_SHAPES
     checked, out = 0, []
     for kind, kshapes in shapes.items():
@@ -186,9 +217,64 @@ def audit_resolved_configs(shapes=None, dtypes=SWEEP_DTYPES,
                             kind, shape, params, dtype, spec,
                             max_b=tsmm.GemmPolicy().max_skinny_t)
                             if v.rule != "accumulator-limit")
-                        out.extend(contracts.check_grid(
-                            kind, _padded_shape(kind, shape, params), params))
+                        padded = _padded_shape(kind, shape, params)
+                        out.extend(contracts.check_grid(kind, padded,
+                                                        params))
+                        epi = _epilogue_config(kind, padded, params, spec)
+                        if epi is not None:
+                            checked += 1
+                            out.extend(contracts.check_grid(*epi))
     return checked, out
+
+
+def audit_kernel_dataflow(shapes=None, dtypes=SWEEP_DTYPES,
+                          specs=SWEEP_SPECS, splits=SWEEP_SPLITS):
+    """Grid-dataflow verification of every unique launch the resolver
+    sweep reaches (``analysis.kernel_verify``): the five committed kernels
+    at their resolved configs plus the reduce epilogues the split configs
+    imply. Returns ``(checked, violations, meta)``; ``meta`` documents the
+    corner-sampling bound and which configs were sampled."""
+    shapes = shapes or SWEEP_SHAPES
+    checked, out = 0, []
+    seen: set = set()
+    sampled: list = []
+
+    def _verify(kind, padded, params, dtype):
+        nonlocal checked
+        key = (kind, tuple(padded), tuple(sorted(dict(params).items())),
+               jnp.dtype(dtype).name)
+        if key in seen:
+            return
+        seen.add(key)
+        checked += 1
+        vios, info = kernel_verify.verify_kernel_config(
+            kind, padded, params, dtype)
+        out.extend(vios)
+        if not info["exhaustive"]:
+            sampled.append({"subject": info["subject"],
+                            "grid": list(info["grid"]),
+                            "cells": info["cells"]})
+
+    for kind, kshapes in shapes.items():
+        for shape in kshapes:
+            for dtype in dtypes:
+                for spec in specs:
+                    configs = [_chooser_pick(kind, *shape, spec, dtype)]
+                    for split in splits:
+                        if kind == "tsm2l" and split != "auto":
+                            continue  # tsm2l has no split dimension
+                        pol = tsmm.GemmPolicy(spec=spec, split=split)
+                        configs.append(ops.resolve_params(
+                            kind, *shape, dtype, pol, interpret=True))
+                    for params in configs:
+                        padded = _padded_shape(kind, shape, params)
+                        _verify(kind, padded, params, dtype)
+                        epi = _epilogue_config(kind, padded, params, spec)
+                        if epi is not None:
+                            _verify(*epi, dtype)
+    meta = {"cell_limit": kernel_verify.EXHAUSTIVE_CELL_LIMIT,
+            "sampled": sampled}
+    return checked, out, meta
 
 
 def audit_qr_configs(qr_shapes=QR_SWEEP_SHAPES, shards=QR_SWEEP_SHARDS,
@@ -335,9 +421,12 @@ def run_audit(*, bench_path=None, table_path=None, shapes=None) -> dict:
             bench = json.load(f)
     table = _load_table(table_path, bench)
 
-    sections: dict[str, tuple[int, list]] = {
+    # Section values are (checked, violations) or (checked, violations,
+    # meta) -- meta keys merge into the section's report entry.
+    sections: dict[str, tuple] = {
         "candidate-grids": audit_candidate_grids(shapes=shapes),
         "resolved-configs": audit_resolved_configs(shapes=shapes),
+        "kernel-dataflow": audit_kernel_dataflow(shapes=shapes),
         "qr-resolved": audit_qr_configs(),
         "policies": audit_policies(),
     }
@@ -350,13 +439,14 @@ def run_audit(*, bench_path=None, table_path=None, shapes=None) -> dict:
         "schema": AUDIT_SCHEMA,
         "bench": str(path) if path is not None else None,
         "sections": {
-            name: {"checked": checked,
-                   "violations": [v.to_json() for v in vios]}
-            for name, (checked, vios) in sections.items()
+            name: {"checked": sec[0],
+                   "violations": [v.to_json() for v in sec[1]],
+                   **(sec[2] if len(sec) > 2 else {})}
+            for name, sec in sections.items()
         },
     }
-    report["checked"] = sum(c for c, _ in sections.values())
-    report["violations"] = sum(len(v) for _, v in sections.values())
+    report["checked"] = sum(sec[0] for sec in sections.values())
+    report["violations"] = sum(len(sec[1]) for sec in sections.values())
     report["ok"] = report["violations"] == 0
     return report
 
@@ -383,6 +473,9 @@ def main(argv=None) -> int:
         status = "ok" if not sec["violations"] else (
             f"{len(sec['violations'])} violation(s)")
         print(f"{name}: {sec['checked']} checked, {status}")
+        if sec.get("sampled"):
+            print(f"  (corner-sampled {len(sec['sampled'])} grid(s) above "
+                  f"{sec['cell_limit']} cells -- see the JSON report)")
         for v in sec["violations"]:
             print(f"  [{v['rule']}] {v['subject']}: {v['detail']}")
     print(f"repro.analysis.audit: {report['checked']} checked, "

@@ -48,6 +48,7 @@ __all__ = [
     "feasible",
     "check_kernel_config",
     "check_grid",
+    "launch_grid",
     "scatter_divisible",
     "check_scatter",
     "check_backward_policy",
@@ -303,12 +304,25 @@ def check_grid(kind: str, padded_shape, params) -> list[Violation]:
     padding is exact for GEMM); calling the ``*_pallas`` kernels directly
     asserts the same conditions at trace time. The auditor re-derives the
     padded shape from the resolver's output and proves exactness here.
+
+    ``kind="reduce"`` is the split-partials epilogue
+    (``kernels/reduce.py``): ``padded_shape`` is the ``(splits, rows,
+    cols)`` partials stack and ``params`` carries ``block_r`` (as resolved
+    by ``reduce.epilogue_block_r``); the contract is ``rows % block_r``.
     """
-    m, d1, _ = padded_shape
     p = dict(params)
     s = p.get("splits", 1)
     subject = f"{kind} padded {tuple(padded_shape)} {p}"
     out = []
+    if kind == "reduce":
+        _, rows, _ = padded_shape
+        if rows % p["block_r"] != 0:
+            out.append(Violation(
+                "grid-divisibility", subject,
+                f"partials rows={rows} is not a multiple of "
+                f"block_r={p['block_r']}"))
+        return out
+    m, d1, _ = padded_shape
     if m % p["block_m"] != 0:
         out.append(Violation(
             "grid-divisibility", subject,
@@ -324,6 +338,46 @@ def check_grid(kind: str, padded_shape, params) -> list[Violation]:
             f"padded m={m} is not a multiple of splits*block_m="
             f"{s * p['block_m']}"))
     return out
+
+
+def launch_grid(kind: str, padded_shape, params
+                ) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """``(grid, dimension_semantics)`` of the launch ``kind`` runs.
+
+    The dataflow half of the grid contract (:func:`check_grid` is the
+    divisibility half): this is the single statement of which grid each
+    kernel launches at a padded operand shape, consumed by
+
+    * ``kernels/ops.py`` -- stamps it onto ``DispatchEvent.launches`` so
+      trace-time spies can assert grid shape;
+    * ``analysis/kernel_verify`` -- proves the *captured* ``pallas_call``
+      grid/semantics equal this derivation (``launch-meta-drift``).
+
+    ``kind="reduce"`` follows the :func:`check_grid` convention:
+    ``padded_shape=(splits, rows, cols)``, ``params={"block_r": ...}``.
+    """
+    p = dict(params)
+    s = p.get("splits", 1)
+    if kind == "tsm2r":
+        m, k, _ = padded_shape
+        if s == 1:
+            return ((m // p["block_m"], k // p["block_k"]),
+                    ("parallel", "arbitrary"))
+        return ((s, m // p["block_m"], k // (s * p["block_k"])),
+                ("parallel", "parallel", "arbitrary"))
+    if kind == "tsm2l":
+        return ((padded_shape[0] // p["block_m"],), ("arbitrary",))
+    if kind == "tsmt":
+        m, a, _ = padded_shape
+        if s == 1:
+            return ((a // p["block_a"], m // p["block_m"]),
+                    ("parallel", "arbitrary"))
+        return ((s, a // p["block_a"], m // (s * p["block_m"])),
+                ("parallel", "parallel", "arbitrary"))
+    if kind == "reduce":
+        return ((padded_shape[1] // p["block_r"],), ("parallel",))
+    raise ValueError(f"unknown kernel kind {kind!r}: valid kinds are "
+                     f"{', '.join(KINDS + ('reduce',))}")
 
 
 # ---------------------------------------------------------------------------

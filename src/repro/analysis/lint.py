@@ -33,6 +33,14 @@ directly above -- the reason is mandatory, waivers are grep-able):
   rule is name-scoped, not shape-scoped -- a genuinely small decomposition
   is waived with a documented pragma. ``repro/linalg`` itself is exempt by
   scope: its (r, r) host-shaped factor *is* the sanctioned call site.
+* **RA006 undeclared-dimension-semantics** -- every ``pallas_call`` under
+  ``kernels/`` must pass explicit ``dimension_semantics`` (directly or via
+  ``compiler_params=CompilerParams(dimension_semantics=...)``). An
+  undeclared grid silently serializes on TPU (correct but unoccupied) and
+  leaves the dataflow verifier (``analysis.kernel_verify``) with no
+  parallel/arbitrary labels to prove race freedom against.
+  ``kernels/compat.py`` is exempt by scope: its recording shim forwards
+  whatever the kernel modules declared.
 
 Import discipline: stdlib only (ast + pathlib), so the linter runs in a
 bare CI interpreter with no jax present.
@@ -59,6 +67,8 @@ RULES = {
                          "contract declaration",
     "raw-linalg-qr": "raw qr/cholesky factorization in models//optim//"
                      "serve/ (route through repro.linalg)",
+    "undeclared-dimension-semantics": "pallas_call under kernels/ without "
+                                      "explicit dimension_semantics",
 }
 
 # Directories (relative to the package root) where RA002 applies: the
@@ -217,6 +227,10 @@ class _Visitor(ast.NodeVisitor):
             f"/{d}/" in f"/{rel}" for d in _PARAM_MATMUL_DIRS)
         self.env_read_allowed_file = any(
             f"/{d}/" in f"/{rel}" for d in _ENV_READ_DIR_ALLOW)
+        # RA006 scope: the kernel modules, minus the compat shim (whose
+        # pallas_call wrapper forwards the callers' declarations).
+        self.check_kernel_launch = ("/kernels/" in f"/{rel}"
+                                    and not rel.endswith("kernels/compat.py"))
 
     # -- plumbing -----------------------------------------------------------
 
@@ -282,6 +296,23 @@ class _Visitor(ast.NodeVisitor):
             self._check_env_read(node)
         if name.endswith("environ.get") and name.startswith("os"):
             self._check_env_read(node)
+
+        if (self.check_kernel_launch
+                and name.split(".")[-1] == "pallas_call"):
+            kw = {k.arg: k.value for k in node.keywords if k.arg}
+            declared = "dimension_semantics" in kw
+            cp = kw.get("compiler_params")
+            if not declared and isinstance(cp, ast.Call):
+                declared = any(k.arg == "dimension_semantics"
+                               for k in cp.keywords)
+            if not declared:
+                self._emit(
+                    "undeclared-dimension-semantics", node,
+                    f"{name} without explicit dimension_semantics: declare "
+                    "parallel/arbitrary per grid dim (via compiler_params="
+                    "CompilerParams(dimension_semantics=...)) so Mosaic "
+                    "parallelizes and kernel_verify can prove race freedom "
+                    "(or waive with a documented pragma)")
 
         if name.split(".")[-1] == "register_executor":
             kw = {k.arg for k in node.keywords}

@@ -106,6 +106,8 @@ __all__ = [
     "executor_reduce_contract",
     "record_dispatches",
     "DispatchEvent",
+    "LaunchMeta",
+    "note_launch",
     "enabled",
 ]
 
@@ -435,31 +437,82 @@ def classify_gemm_t(m: int, a_dim: int, b_dim: int,
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class LaunchMeta:
+    """One kernel launch a dispatch resolved to, as derived from the pure
+    grid contract (``analysis.contracts.launch_grid``) by the op impls at
+    trace time. ``kind`` includes "reduce" for the split-partials epilogue;
+    ``splits`` is the *resolved* S (1 for the sequential kernels). The
+    dataflow verifier proves this derivation equals what ``pallas_call``
+    actually captures (its ``launch-meta-drift`` rule), so spy assertions
+    on these fields are assertions about the real launch."""
+
+    kind: str                           # "tsm2r"|"tsm2l"|"tsmt"|"reduce"
+    grid: tuple[int, ...]
+    dimension_semantics: tuple[str, ...]
+    splits: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
 class DispatchEvent:
     """One routing decision: which entry, classified kind, chosen executor,
     and the (tall, minor, minor) shape it was made for. Emitted at trace
     time -- a cached jit call emits nothing. ``split`` records the policy's
-    split knob at dispatch ("auto" | "never" | a pinned int) so benchmark
-    arms can assert split-vs-sequential routing; the *resolved* S for
-    "auto" is a kernel-level decision (observable via the ops-level kernel
-    spies in tests)."""
+    split knob at dispatch ("auto" | "never" | a pinned int); ``launches``
+    carries one :class:`LaunchMeta` per Pallas launch the executor's trace
+    noted (via :func:`note_launch`) -- the resolved grid, semantics and S,
+    so spies can assert grid shape, not just routing. Dense/XLA arms note
+    nothing; the outer event of a shard_map dispatch is also empty (the
+    per-shard re-dispatch events carry their own launches)."""
 
     entry: str       # "mm" (A @ B) | "mmt" (X^T Y)
     kind: str        # "tsm2r" | "tsm2l" | "tsmt" | "dense"
     executor: str    # registry key
     shape: tuple[int, int, int]
     split: str | int = "auto"
+    launches: tuple = ()       # of LaunchMeta
 
 
 _LISTENERS: list = []
 
+# Stack of per-dispatch LaunchMeta collectors: the public entries push one
+# around their executor invocation (only while spies listen); the ops impls
+# report resolved launches into the innermost frame via note_launch.
+_LAUNCH_NOTES: list = []
+
+
+def note_launch(kind: str, grid, dimension_semantics, splits: int = 1
+                ) -> None:
+    """Record one resolved kernel launch onto the current dispatch's event
+    (no-op outside a listened-to dispatch). Called by ``kernels/ops.py``
+    with ``analysis.contracts.launch_grid`` output."""
+    if _LAUNCH_NOTES:
+        _LAUNCH_NOTES[-1].append(LaunchMeta(
+            kind, tuple(grid), tuple(dimension_semantics), splits))
+
 
 def _notify(entry: str, kind: str, executor: str, shape,
-            split: str | int = "auto") -> None:
+            split: str | int = "auto", launches: tuple = ()) -> None:
     if _LISTENERS:
-        ev = DispatchEvent(entry, kind, executor, tuple(shape), split)
+        ev = DispatchEvent(entry, kind, executor, tuple(shape), split,
+                           launches)
         for cb in tuple(_LISTENERS):
             cb(ev)
+
+
+def _dispatch(entry: str, kind: str, executor: str, shape, policy, run):
+    """Run the chosen executor, then emit the spy event carrying whatever
+    launches the run noted. Without listeners this is just ``run()`` --
+    note_launch collectors only exist while a spy is attached."""
+    if not _LISTENERS:
+        return run()
+    notes: list = []
+    _LAUNCH_NOTES.append(notes)
+    try:
+        out = run()
+    finally:
+        _LAUNCH_NOTES.pop()
+        _notify(entry, kind, executor, shape, policy.split, tuple(notes))
+    return out
 
 
 @contextlib.contextmanager
@@ -860,12 +913,15 @@ def tsmm(a: jnp.ndarray, b: jnp.ndarray, *, mode: str | None = None,
     forced = _forced_kind("mm", mode, force, p)
     kind = forced if forced is not None else classify_gemm(m_tall, k, n, p)
     name = _select_executor("mm", kind, m_tall, k, n, p, forced is not None)
-    _notify("mm", kind, name, (m_tall, k, n), p.split)
-    ex = _EXECUTORS[name]
-    if a.ndim > 2 and name != "dense-xla":
-        out = ex("mm", kind, a.reshape(m_tall, k), b, p)
-        return out.reshape(*a.shape[:-1], n)
-    return ex("mm", kind, a, b, p)
+
+    def run():
+        ex = _EXECUTORS[name]
+        if a.ndim > 2 and name != "dense-xla":
+            out = ex("mm", kind, a.reshape(m_tall, k), b, p)
+            return out.reshape(*a.shape[:-1], n)
+        return ex("mm", kind, a, b, p)
+
+    return _dispatch("mm", kind, name, (m_tall, k, n), p, run)
 
 
 def tsmm_t(x: jnp.ndarray, y: jnp.ndarray, *, mode: str | None = None,
@@ -893,8 +949,8 @@ def tsmm_t(x: jnp.ndarray, y: jnp.ndarray, *, mode: str | None = None,
             else classify_gemm_t(m_tall, a_dim, b_dim, p))
     name = _select_executor("mmt", kind, m_tall, a_dim, b_dim, p,
                             forced is not None)
-    _notify("mmt", kind, name, (m_tall, a_dim, b_dim), p.split)
-    return _EXECUTORS[name]("mmt", kind, x, y, p)
+    return _dispatch("mmt", kind, name, (m_tall, a_dim, b_dim), p,
+                     lambda: _EXECUTORS[name]("mmt", kind, x, y, p))
 
 
 def bound_class(m: int, k: int, n: int, dtype=jnp.bfloat16,

@@ -46,6 +46,15 @@ Shims and the version ranges they cover:
   psum+slice / concat emulation if the installed JAX rejects it.
 * ``auto_interpret()`` -- the Pallas interpret-mode default: kernel bodies
   run in Python off-TPU (correctness on CPU), compile via Mosaic on TPU.
+* ``pallas_call(...)`` / ``capture_launches()`` -- the launch-recording
+  shim. Every in-repo kernel routes its ``pl.pallas_call`` through
+  :func:`pallas_call`, which is a zero-overhead pass-through outside a
+  :func:`capture_launches` scope and otherwise records a
+  :class:`LaunchCapture` (grid, BlockSpec block shapes + index-map
+  callables, dimension_semantics, operand/out/scratch avals, the kernel
+  fn) per invocation. ``repro.analysis.kernel_verify`` drives the kernel
+  entry points under ``jax.eval_shape`` inside such a scope to verify the
+  grid dataflow statically -- no device, no compile.
 
 The probes are trace-time only (``jax.eval_shape``): importing this module
 never compiles or executes device code.
@@ -53,8 +62,12 @@ never compiles or executes device code.
 
 from __future__ import annotations
 
+import contextlib
+import dataclasses
+
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
@@ -70,6 +83,10 @@ __all__ = [
     "psum_scatter",
     "all_gather",
     "auto_interpret",
+    "BlockSpecCapture",
+    "LaunchCapture",
+    "capture_launches",
+    "pallas_call",
 ]
 
 
@@ -302,3 +319,119 @@ def optimization_barrier(x):
     if BARRIER_IS_DIFFERENTIABLE:
         return jax.lax.optimization_barrier(x)
     return _barrier_vjp(x)
+
+
+# ---------------------------------------------------------------------------
+# Launch-recording pallas_call shim (repro.analysis.kernel_verify)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpecCapture:
+    """One ``pl.BlockSpec`` as captured at launch-construction time.
+
+    ``block_shape`` entries may be None (pallas' "whole dim" spelling);
+    ``index_map`` is the raw Python callable, evaluable with plain ints.
+    """
+    block_shape: tuple
+    index_map: object
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchCapture:
+    """Everything the dataflow verifier needs about one ``pallas_call``.
+
+    Captured when the launch is *constructed* inside a
+    :func:`capture_launches` scope -- i.e. at trace time, before any
+    compile -- so ``jax.eval_shape`` over a kernel entry point is enough
+    to populate it. ``operands``/``out_shapes``/``scratch_shapes`` are
+    ``jax.ShapeDtypeStruct``-like (``.shape``/``.dtype``); ``kernel`` is
+    the Python kernel function (for AST guard inspection).
+    """
+    name: str
+    kernel: object
+    grid: tuple
+    in_specs: tuple          # of BlockSpecCapture
+    out_specs: tuple         # of BlockSpecCapture
+    operands: tuple          # abstract values of the call's array args
+    out_shapes: tuple        # ShapeDtypeStructs
+    scratch_shapes: tuple    # ShapeDtypeStructs (dtype normalized)
+    dimension_semantics: tuple | None
+    interpret: bool
+
+
+_CAPTURE_STACK: list[list] = []
+
+
+@contextlib.contextmanager
+def capture_launches():
+    """Collect a ``LaunchCapture`` per :func:`pallas_call` in scope.
+
+    Scopes nest; each capture lands only in the innermost collector.
+    Trace-time only -- typical use wraps a ``jax.eval_shape`` of an
+    (unjitted) kernel entry point.
+    """
+    log: list[LaunchCapture] = []
+    _CAPTURE_STACK.append(log)
+    try:
+        yield log
+    finally:
+        _CAPTURE_STACK.pop()
+
+
+def _capture_spec(spec) -> BlockSpecCapture:
+    return BlockSpecCapture(
+        block_shape=tuple(getattr(spec, "block_shape", ()) or ()),
+        index_map=getattr(spec, "index_map", None),
+    )
+
+
+def _capture_sds(x):
+    """Normalize anything shaped (MemoryRef, ShapeDtypeStruct, aval) to a
+    plain ShapeDtypeStruct. Scratch MemoryRefs carry ``dtype`` as a scalar
+    *class* (e.g. ``jnp.float32``) on some versions -- ``jnp.dtype``
+    canonicalizes both spellings."""
+    return jax.ShapeDtypeStruct(tuple(x.shape), jnp.dtype(x.dtype))
+
+
+def pallas_call(kernel, *, grid, in_specs, out_specs, out_shape,
+                scratch_shapes=(), compiler_params=None, interpret=False,
+                **kwargs):
+    """``pl.pallas_call`` pass-through that records the launch spec.
+
+    Outside a :func:`capture_launches` scope this adds one truthiness
+    check per trace. Inside one, the returned callable logs a
+    :class:`LaunchCapture` each time it is invoked (so the recorded
+    operand avals are the ones actually passed). The keyword-only
+    signature pins the subset of the ``pallas_call`` surface the repo's
+    kernels use; new kwargs flow through ``**kwargs`` untouched.
+    """
+    inner = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, scratch_shapes=scratch_shapes,
+        compiler_params=compiler_params, interpret=interpret, **kwargs)
+    if not _CAPTURE_STACK:
+        return inner
+
+    out_specs_t = out_specs if isinstance(out_specs, (tuple, list)) \
+        else (out_specs,)
+    out_shape_t = out_shape if isinstance(out_shape, (tuple, list)) \
+        else (out_shape,)
+    semantics = getattr(compiler_params, "dimension_semantics", None)
+
+    def recorded(*operands):
+        _CAPTURE_STACK[-1].append(LaunchCapture(
+            name=getattr(kernel, "__name__", repr(kernel)),
+            kernel=kernel,
+            grid=tuple(grid),
+            in_specs=tuple(_capture_spec(s) for s in in_specs),
+            out_specs=tuple(_capture_spec(s) for s in out_specs_t),
+            operands=tuple(_capture_sds(x) for x in operands),
+            out_shapes=tuple(_capture_sds(s) for s in out_shape_t),
+            scratch_shapes=tuple(_capture_sds(s) for s in scratch_shapes),
+            dimension_semantics=(tuple(semantics)
+                                 if semantics is not None else None),
+            interpret=bool(interpret),
+        ))
+        return inner(*operands)
+
+    return recorded

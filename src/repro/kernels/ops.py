@@ -53,7 +53,7 @@ import jax.numpy as jnp
 from repro.analysis import contracts
 from repro.core import perf_model
 from repro.kernels import compat, ref
-from repro.kernels.reduce import reduce_partials
+from repro.kernels.reduce import epilogue_block_r, reduce_partials
 from repro.kernels.tsm2l import tsm2l_pallas
 from repro.kernels.tsm2r import tsm2r_pallas, tsm2r_pallas_split
 from repro.kernels.tsmt import tsmt_pallas, tsmt_pallas_split
@@ -145,6 +145,16 @@ def _policy_split(policy) -> int | None:
 
 def _vmem_budget(policy) -> int:
     return int(policy.spec.vmem_bytes * policy.spec.vmem_usable)
+
+
+def _note_launch(kind, padded_shape, params):
+    """Stamp the resolved launch onto the current DispatchEvent (no-op
+    outside a `tsmm.record_dispatches` scope). Grid and semantics come
+    from the pure contract -- `analysis.kernel_verify` proves that
+    derivation equals the captured `pallas_call` (launch-meta-drift)."""
+    grid, sem = contracts.launch_grid(kind, padded_shape, params)
+    _dispatcher().note_launch(kind, grid, sem,
+                              dict(params).get("splits", 1))
 
 
 # ---------------------------------------------------------------------------
@@ -291,6 +301,7 @@ def _tsm2r_impl(a, b, block_m, block_k, splits, policy):
     if splits == 1:
         a_p = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
         b_p = _pad_to(b, 0, block_k)
+        _note_launch("tsm2r", (a_p.shape[0], a_p.shape[1], n), p)
         out = tsm2r_pallas(a_p, b_p, block_m=block_m, block_k=block_k,
                            interpret=interpret)
         return out[:m]
@@ -298,8 +309,13 @@ def _tsm2r_impl(a, b, block_m, block_k, splits, policy):
     # for GEMM, so m % (S*bk) non-multiples cost only the padded stream).
     a_p = _pad_to(_pad_to(a, 0, block_m), 1, splits * block_k)
     b_p = _pad_to(b, 0, splits * block_k)
+    _note_launch("tsm2r", (a_p.shape[0], a_p.shape[1], n), p)
     parts = tsm2r_pallas_split(a_p, b_p, block_m=block_m, block_k=block_k,
                                splits=splits, interpret=interpret)
+    br = epilogue_block_r(splits, a_p.shape[0], n, block_r=block_m,
+                          vmem_budget=_vmem_budget(policy))
+    if br is not None:
+        _note_launch("reduce", (splits, a_p.shape[0], n), {"block_r": br})
     out = reduce_partials(parts, a.dtype, block_r=block_m,
                           vmem_budget=_vmem_budget(policy),
                           interpret=interpret)
@@ -357,6 +373,7 @@ def _tsm2l_impl(a, b, block_m, policy):
     block_m = resolve_params("tsm2l", m, k, n, a.dtype, policy,
                              block_m=block_m, interpret=interpret)["block_m"]
     a_p = _pad_to(a, 0, block_m)
+    _note_launch("tsm2l", (a_p.shape[0], k, n), {"block_m": block_m})
     out = tsm2l_pallas(a_p, b, block_m=block_m, interpret=interpret)
     return out[:m]
 
@@ -408,6 +425,7 @@ def _tsmt_impl(x, y, block_m, block_a, splits, policy):
     if splits == 1:
         x_p = _pad_to(_pad_to(x, 0, block_m), 1, block_a)
         y_p = _pad_to(y, 0, block_m)
+        _note_launch("tsmt", (x_p.shape[0], x_p.shape[1], b_dim), p)
         out = tsmt_pallas(x_p, y_p, block_m=block_m, block_a=block_a,
                           interpret=interpret)
         return out[:a_dim]
@@ -415,8 +433,14 @@ def _tsmt_impl(x, y, block_m, block_a, splits, policy):
     # nothing to the partial sums), reduce the (S, a, b) f32 stack.
     x_p = _pad_to(_pad_to(x, 0, splits * block_m), 1, block_a)
     y_p = _pad_to(y, 0, splits * block_m)
+    _note_launch("tsmt", (x_p.shape[0], x_p.shape[1], b_dim), p)
     parts = tsmt_pallas_split(x_p, y_p, block_m=block_m, block_a=block_a,
                               splits=splits, interpret=interpret)
+    br = epilogue_block_r(splits, x_p.shape[1], b_dim, block_r=block_a,
+                          vmem_budget=_vmem_budget(policy))
+    if br is not None:
+        _note_launch("reduce", (splits, x_p.shape[1], b_dim),
+                     {"block_r": br})
     out = reduce_partials(parts, x.dtype, block_r=block_a,
                           vmem_budget=_vmem_budget(policy),
                           interpret=interpret)

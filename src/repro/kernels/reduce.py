@@ -55,7 +55,7 @@ def sum_partials_pallas(p: jnp.ndarray, *, block_r: int, out_dtype,
         interpret = compat.auto_interpret()
     s, rows, cols = p.shape
     assert rows % block_r == 0, (rows, block_r)
-    return pl.pallas_call(
+    return compat.pallas_call(
         _sum_lead_kernel,
         grid=(rows // block_r,),
         in_specs=[pl.BlockSpec((s, block_r, cols), lambda i: (0, i, 0))],
@@ -68,22 +68,19 @@ def sum_partials_pallas(p: jnp.ndarray, *, block_r: int, out_dtype,
     )(p)
 
 
-def reduce_partials(p: jnp.ndarray, out_dtype, *, block_r: int,
-                    vmem_budget: int, interpret: bool | None = None
-                    ) -> jnp.ndarray:
-    """Sum the ``(S, rows, cols)`` partials stack to ``(rows, cols)``.
+def epilogue_block_r(s: int, rows: int, cols: int, *, block_r: int,
+                     vmem_budget: int) -> int | None:
+    """Row block the Pallas epilogue would launch with, or None.
 
-    ``block_r`` is the emitting kernel's row block (it divides rows by
-    construction); it is halved while the per-cell stack would overrun
-    ``vmem_budget`` bytes. Size-chosen path: ``jnp.sum`` under
-    ``JNP_REDUCE_MAX_ELEMS`` elements, the Pallas row-streaming kernel
-    above it.
+    The pure half of :func:`reduce_partials`: None means the fused
+    ``jnp.sum`` path runs (single slice, small stack, or no VMEM-feasible
+    row block that divides ``rows``). A returned value is the resolved
+    ``block_r`` -- the (S, rows, cols) sweep in ``repro.analysis.audit``
+    and the launch metadata on ``DispatchEvent`` both derive the epilogue
+    grid ``(rows // block_r,)`` from it.
     """
-    s, rows, cols = p.shape
-    if s == 1:
-        return p[0].astype(out_dtype)
-    if p.size <= JNP_REDUCE_MAX_ELEMS:
-        return jnp.sum(p.astype(jnp.float32), axis=0).astype(out_dtype)
+    if s == 1 or s * rows * cols <= JNP_REDUCE_MAX_ELEMS:
+        return None
     block_r = min(block_r, rows)
     # in stack + out block, f32; lane-padded cols approximates the tile.
     cols_pad = ((cols + 127) // 128) * 128
@@ -94,6 +91,26 @@ def reduce_partials(p: jnp.ndarray, out_dtype, *, block_r: int,
     while cell_bytes(block_r) > vmem_budget and block_r % 2 == 0 and block_r > 8:
         block_r //= 2
     if rows % block_r != 0:  # defensive: fall back to the fused XLA sum
+        return None
+    return block_r
+
+
+def reduce_partials(p: jnp.ndarray, out_dtype, *, block_r: int,
+                    vmem_budget: int, interpret: bool | None = None
+                    ) -> jnp.ndarray:
+    """Sum the ``(S, rows, cols)`` partials stack to ``(rows, cols)``.
+
+    ``block_r`` is the emitting kernel's row block (it divides rows by
+    construction); :func:`epilogue_block_r` halves it while the per-cell
+    stack would overrun ``vmem_budget`` bytes, or returns None to take the
+    fused ``jnp.sum`` path (small stacks, or no feasible block).
+    """
+    s, rows, cols = p.shape
+    if s == 1:
+        return p[0].astype(out_dtype)
+    br = epilogue_block_r(s, rows, cols, block_r=block_r,
+                          vmem_budget=vmem_budget)
+    if br is None:
         return jnp.sum(p.astype(jnp.float32), axis=0).astype(out_dtype)
-    return sum_partials_pallas(p, block_r=block_r, out_dtype=out_dtype,
+    return sum_partials_pallas(p, block_r=br, out_dtype=out_dtype,
                                interpret=interpret)

@@ -62,7 +62,7 @@ def tsm2l_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int,
     assert m % block_m == 0, (m, block_m)
     grid = (m // block_m,)
 
-    return pl.pallas_call(
+    return compat.pallas_call(
         _tsm2l_kernel,
         grid=grid,
         in_specs=[

@@ -77,7 +77,7 @@ def tsm2r_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int, block_k: int,
     assert m % block_m == 0 and k % block_k == 0, (m, k, block_m, block_k)
     grid = (m // block_m, k // block_k)
 
-    return pl.pallas_call(
+    return compat.pallas_call(
         _tsm2r_kernel,
         grid=grid,
         in_specs=[
@@ -129,7 +129,7 @@ def tsm2r_pallas_split(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int,
     steps = k // (splits * block_k)   # k blocks per reduction slice
     grid = (splits, m // block_m, steps)
 
-    return pl.pallas_call(
+    return compat.pallas_call(
         _tsm2r_split_kernel,
         grid=grid,
         in_specs=[

@@ -77,7 +77,7 @@ def tsmt_pallas(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int, block_a: int,
     assert m % block_m == 0 and a % block_a == 0, (m, a, block_m, block_a)
     grid = (a // block_a, m // block_m)
 
-    return pl.pallas_call(
+    return compat.pallas_call(
         _tsmt_kernel,
         grid=grid,
         in_specs=[
@@ -133,7 +133,7 @@ def tsmt_pallas_split(x: jnp.ndarray, y: jnp.ndarray, *, block_m: int,
     steps = m // (splits * block_m)   # m blocks per reduction slice
     grid = (splits, a // block_a, steps)
 
-    return pl.pallas_call(
+    return compat.pallas_call(
         _tsmt_split_kernel,
         grid=grid,
         in_specs=[

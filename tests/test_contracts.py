@@ -138,6 +138,60 @@ def test_grid_divisibility_contract():
     assert "grid-divisibility" in _rules(bad_t)
 
 
+def test_grid_divisibility_reduce_kind():
+    ok = contracts.check_grid("reduce", (4, 4096, 16), {"block_r": 256})
+    assert ok == []
+    bad = contracts.check_grid("reduce", (4, 4100, 16), {"block_r": 256})
+    assert _rules(bad) == ["grid-divisibility"]
+
+
+def test_launch_grid_all_kinds():
+    assert contracts.launch_grid(
+        "tsm2r", (4096, 1024, 8), {"block_m": 256, "block_k": 256}) == (
+            (16, 4), ("parallel", "arbitrary"))
+    assert contracts.launch_grid(
+        "tsm2r", (4096, 1024, 8),
+        {"block_m": 256, "block_k": 256, "splits": 2}) == (
+            (2, 16, 2), ("parallel", "parallel", "arbitrary"))
+    assert contracts.launch_grid(
+        "tsm2l", (8192, 16, 16), {"block_m": 512}) == (
+            (16,), ("arbitrary",))
+    assert contracts.launch_grid(
+        "tsmt", (4096, 128, 8), {"block_m": 256, "block_a": 128}) == (
+            (1, 16), ("parallel", "arbitrary"))
+    assert contracts.launch_grid(
+        "tsmt", (4096, 128, 8),
+        {"block_m": 256, "block_a": 64, "splits": 2}) == (
+            (2, 2, 8), ("parallel", "parallel", "arbitrary"))
+    assert contracts.launch_grid(
+        "reduce", (4, 4096, 16), {"block_r": 256}) == (
+            (16,), ("parallel",))
+    with pytest.raises(ValueError, match="unknown kernel kind"):
+        contracts.launch_grid("tsmr", (1, 1, 1), {})
+
+
+def test_epilogue_block_r_plan():
+    from repro.kernels import reduce as kreduce
+
+    budget = int(contracts.vmem_budget(V5E))
+    # single slice and small stacks take the fused jnp.sum path
+    assert kreduce.epilogue_block_r(1, 1 << 20, 16, block_r=256,
+                                    vmem_budget=budget) is None
+    assert kreduce.epilogue_block_r(4, 128, 16, block_r=128,
+                                    vmem_budget=budget) is None
+    # a big split tsm2r stack keeps the emitting kernel's row block...
+    assert kreduce.epilogue_block_r(4, 1 << 16, 16, block_r=256,
+                                    vmem_budget=budget) == 256
+    # ...and halves it while the per-cell stack would overrun VMEM
+    small = kreduce.epilogue_block_r(64, 1 << 16, 512, block_r=1024,
+                                     vmem_budget=1 << 22)
+    assert small is not None and small < 1024
+    assert (1 << 16) % small == 0
+    # a feasible block that does not divide rows falls back to jnp.sum
+    assert kreduce.epilogue_block_r(4, 100000, 16, block_r=192,
+                                    vmem_budget=budget) is None
+
+
 def test_scatter_divisibility_contract():
     assert contracts.scatter_divisible(64, 2)
     assert not contracts.scatter_divisible(63, 2)

@@ -286,6 +286,70 @@ def test_raw_linalg_qr_pragma_waiver():
 
 
 # ---------------------------------------------------------------------------
+# RA006: undeclared-dimension-semantics
+# ---------------------------------------------------------------------------
+
+def test_pallas_call_without_semantics_flagged_in_kernels():
+    errs = _lint("""\
+        from repro.kernels import compat
+
+        def launch(kernel, grid, specs, out):
+            return compat.pallas_call(
+                kernel, grid=grid, in_specs=specs, out_specs=out[0],
+                out_shape=out[1])
+        """, rel="kernels/newkernel.py")
+    assert _rules(errs) == ["undeclared-dimension-semantics"]
+
+
+def test_pallas_call_with_compiler_params_semantics_ok():
+    errs = _lint("""\
+        from repro.kernels import compat
+
+        def launch(kernel, grid, specs, out):
+            return compat.pallas_call(
+                kernel, grid=grid, in_specs=specs, out_specs=out[0],
+                out_shape=out[1],
+                compiler_params=compat.CompilerParams(
+                    dimension_semantics=("parallel", "arbitrary")))
+        """, rel="kernels/newkernel.py")
+    assert errs == []
+
+
+def test_pallas_call_with_direct_semantics_kwarg_ok():
+    errs = _lint("""\
+        from jax.experimental import pallas as pl
+
+        def launch(kernel, grid, specs, out):
+            return pl.pallas_call(
+                kernel, grid=grid, in_specs=specs, out_specs=out[0],
+                out_shape=out[1],
+                dimension_semantics=("arbitrary",))
+        """, rel="kernels/newkernel.py")
+    assert errs == []
+
+
+def test_pallas_call_exempt_outside_kernels_and_in_compat():
+    src = ("from jax.experimental import pallas as pl\n"
+           "f = pl.pallas_call(k, grid=(4,), in_specs=s, out_specs=o,\n"
+           "                   out_shape=sh)\n")
+    assert _lint(src, rel="analysis/kernel_verify.py") == []
+    assert _lint(src, rel="kernels/compat.py") == []
+
+
+def test_pallas_call_semantics_pragma_waiver():
+    errs = _lint("""\
+        from jax.experimental import pallas as pl
+
+        def launch(kernel):
+            # repro: allow-undeclared-dimension-semantics (1-cell grid,
+            # nothing to parallelize)
+            return pl.pallas_call(kernel, grid=(1,), in_specs=[],
+                                  out_specs=None, out_shape=None)
+        """, rel="kernels/newkernel.py")
+    assert errs == []
+
+
+# ---------------------------------------------------------------------------
 # Clean tree
 # ---------------------------------------------------------------------------
 

@@ -192,10 +192,42 @@ def test_dispatch_event_records_split_knob():
         with tsmm.record_dispatches() as log:
             tsmm.tsmm_t(x, y)
     assert [e.split for e in log] == [4]
+    # The event also carries the launch metadata of the real grid: the
+    # split tsmt kernel ran with S=4 leading parallel slices.
+    (event,) = log
+    meta = event.launches[0]
+    assert meta.kind == "tsmt" and meta.splits == 4
+    assert len(meta.grid) == 3 and meta.grid[0] == 4
+    assert meta.dimension_semantics == ("parallel", "parallel", "arbitrary")
     with tsmm.record_dispatches() as log:
         with tsmm.policy(interpret=True):
             tsmm.tsmm_t(x, y)
     assert [e.split for e in log] == ["auto"]
+    assert all(lm.kind in ("tsmt", "reduce")
+               for e in log for lm in e.launches)
+
+
+def test_dispatch_event_launch_grid_matches_contract():
+    """The grid/semantics stamped on DispatchEvent.launches equal the pure
+    contracts.launch_grid derivation for the same padded shape -- the
+    invariant kernel_verify enforces as launch-meta-drift over the audit
+    sweep, spot-checked here end-to-end through dispatch."""
+    from repro.analysis import audit, contracts
+
+    shape = (4096, 64, 8)
+    pol = tsmm.GemmPolicy(split=2, interpret=True)
+    params = ops.resolve_params("tsmt", *shape, jnp.float32, pol,
+                                interpret=True)
+    padded = audit._padded_shape("tsmt", shape, params)
+    want = contracts.launch_grid("tsmt", padded, params)
+
+    x, y = _rand(12, (4096, 64)), _rand(13, (4096, 8))
+    with tsmm.policy(split=2, interpret=True):
+        with tsmm.record_dispatches() as log:
+            tsmm.tsmm_t(x, y)
+    (event,) = log
+    meta = next(lm for lm in event.launches if lm.kind == "tsmt")
+    assert (meta.grid, meta.dimension_semantics) == want
 
 
 # ---------------------------------------------------------------------------
