@@ -7,12 +7,25 @@ Every arm here goes through ``benchmarks.common.timeit_arm`` (fresh jit
 wrapper per arm) and ``record_dispatches`` asserts the arm actually hit
 its intended executor -- a wrong route aborts the section instead of
 publishing a bogus ratio.
+
+``run_int8`` is the low-precision A/B: per kind, the f32 kernel arm vs
+the ``GemmPolicy(quant="int8")`` arm (both executor-asserted; the quant
+arm additionally asserts ``DispatchEvent.quant``), plus the quantized
+output's max-normalized error against the f32 oracle, gated at the
+documented 5% tolerance (README "Low-precision TSM2X").
 """
 
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from benchmarks.common import emit, rand, timeit_arm
 from repro.core import tsmm
+
+# Quantized output must stay within this of the f32 oracle (max-norm,
+# relative to the oracle's absmax). Measured ~0.006 on these shapes; the
+# README documents the 5% envelope.
+INT8_REL_TOL = 0.05
 
 # One shape per kernel kind, all inside the auto-dispatch regime.
 SHAPES = [
@@ -65,5 +78,49 @@ def run():
     return emit(rows)
 
 
+def run_int8():
+    """int8_vs_f32: quantized-operand arms vs the f32 kernels per kind."""
+    rows = []
+    for kind, (m, d1, d2) in SHAPES:
+        if kind == "tsmt":
+            x, y = rand(m + d1, (m, d1)), rand(m + d2, (m, d2))
+            fn, args = (lambda x_, y_: tsmm.tsmm_t(x_, y_)), (x, y)
+            oracle = x.T @ y
+        else:
+            a, b = rand(m + d1, (m, d1)), rand(m + d2, (d1, d2))
+            fn, args = (lambda a_, b_: tsmm.tsmm(a_, b_)), (a, b)
+            oracle = a @ b
+        times = {}
+        for arm, pol in [("f32", tsmm.GemmPolicy()),
+                         ("int8", tsmm.GemmPolicy(quant="int8"))]:
+            us, log = timeit_arm(fn, *args, policy=pol,
+                                 expect_executors={"pallas-tpu"},
+                                 reps=3, warmup=1)
+            times[arm] = us
+            quants = sorted({str(e.quant) for e in log})
+            if arm == "int8" and quants != ["int8"]:
+                raise AssertionError(
+                    f"int8 arm dispatched with quant knobs {quants}; "
+                    f"dispatch log: {log}")
+            rows.append((f"int8_vs_f32_{kind}_m{m}_{arm}", round(us, 1),
+                         f"executors="
+                         f"{'+'.join(sorted({e.executor for e in log}))};"
+                         f"quant={'+'.join(quants)};dispatch_ok=1"))
+        rows.append((f"int8_vs_f32_{kind}_m{m}_ratio", 0,
+                     f"f32_over_int8={times['f32'] / times['int8']:.3f}"))
+        with tsmm.policy(tsmm.GemmPolicy(quant="int8")):
+            qout = fn(*args)
+        rel = float(jnp.max(jnp.abs(qout - oracle))
+                    / jnp.max(jnp.abs(oracle)))
+        if rel > INT8_REL_TOL:
+            raise AssertionError(
+                f"{kind} int8 output off by {rel:.4f} rel (max-norm), "
+                f"tolerance {INT8_REL_TOL}")
+        rows.append((f"int8_vs_f32_{kind}_m{m}_err", 0,
+                     f"rel_err_maxnorm={rel:.5f};tol={INT8_REL_TOL};ok=1"))
+    return emit(rows)
+
+
 if __name__ == "__main__":
     run()
+    run_int8()

@@ -64,6 +64,10 @@ def dispatch_sanity(m: int = 4096, k: int = 512, n: int = 8):
     silently stops threading the knob fails the arm even though the
     executor looks right.
 
+    The ``quant_int8`` arm asserts the int8 operand path the same way:
+    kernel executor, with ``DispatchEvent.quant == "int8"`` on every
+    event.
+
     On a >1-device backend mesh arms join: ``tsmm_t`` under a DP mesh
     must land on ``shard_map`` (reduce="psum", replicated output) and on
     ``shard_map-scatter`` (reduce="psum_scatter", sharded output); the
@@ -99,6 +103,20 @@ def dispatch_sanity(m: int = 4096, k: int = 512, n: int = 8):
                     "split": splits_seen,
                     "ok": (observed == ["pallas-tpu"]
                            and splits_seen == [str(knob)])})
+    # Quantized arm: the int8 operand path must stay on the kernel
+    # executor AND every dispatch event must carry the quant knob
+    # (``DispatchEvent.quant``) -- a policy that silently stops threading
+    # quant="int8" through dispatch fails the arm even though the
+    # executor looks right.
+    _, log = jit_isolated(lambda a_, b_: tsmm.tsmm(a_, b_), a, b,
+                          policy=tsmm.GemmPolicy(quant="int8"))
+    observed = sorted({e.executor for e in log})
+    quants_seen = sorted({str(e.quant) for e in log})
+    out.append({"arm": "quant_int8", "shape": [m, k, n],
+                "expected": "pallas-tpu", "observed": observed,
+                "quant": quants_seen,
+                "ok": (observed == ["pallas-tpu"]
+                       and quants_seen == ["int8"])})
     # QR stages: both GEMMs of the CholeskyQR2 factorization (Gram and
     # R^-1 apply, every pass) must land on the tall-skinny kernels -- the
     # Gram as tsmt, the apply as tsm2l, and nothing on dense-xla. The

@@ -195,6 +195,7 @@ def main(argv=None) -> None:
         ("Table3/4: kernel parameters + bound classes", bench_params.run),
         ("Fig6 ladder: V0->V3 ablation", bench_ablation.run),
         ("A/B: policy arms, jit-cache isolated", bench_ab.run),
+        ("int8_vs_f32: quantized kernel arms vs f32 oracle", bench_ab.run_int8),
         ("collectives: psum vs psum_scatter tsmm_t arms", bench_collectives.run),
         ("qr: tsqr vs dense-oracle vs gram-schmidt", bench_qr.run),
         ("e2e: train/decode step throughput", bench_e2e.run),

@@ -25,6 +25,12 @@ Sections (one report entry each):
 * ``bench-dispatch`` -- the committed ``BENCH_*.json`` dispatch-sanity
   arms observed only registered executors, matched their expectations,
   and scatter arms ran on a divisible output axis.
+* ``quant-resolved`` -- the int8 operand path
+  (``GemmPolicy.quant="int8"``): quantized candidate grids and resolved
+  configs re-check under the effective int8 operand dtype (32-row
+  sublane quantum, 1-byte tiles, caller-dtype output window), grid
+  exactly, and pass the grid-dataflow verifier -- so the
+  f32-accumulator rule provably covers the q8 kernels.
 * ``qr-resolved`` -- every GEMM stage the ``repro.linalg`` QR subsystem
   can hand the resolver (:func:`contracts.qr_stage_shapes`: the Gram
   ``tsmt`` and apply ``tsm2l`` of CholeskyQR2, replicated and per-shard
@@ -70,6 +76,7 @@ __all__ = [
     "audit_candidate_grids",
     "audit_resolved_configs",
     "audit_kernel_dataflow",
+    "audit_quant_configs",
     "audit_qr_configs",
     "audit_tuning_table",
     "audit_policies",
@@ -277,6 +284,80 @@ def audit_kernel_dataflow(shapes=None, dtypes=SWEEP_DTYPES,
     return checked, out, meta
 
 
+def audit_quant_configs(shapes=None, dtypes=SWEEP_DTYPES,
+                        specs=SWEEP_SPECS, splits=SWEEP_SPLITS):
+    """Quantized (``GemmPolicy.quant="int8"``) candidate grids and
+    resolved configs are launchable, grid-exact, and dataflow-clean.
+
+    The int8 operand path changes both the bytes the VMEM footprint
+    prices and the sublane quantum (32 rows vs 8), so the sweep re-runs
+    the candidate-grid and resolved-config checks at the *effective*
+    operand dtype (``jnp.int8``) with the caller dtype as ``out_dtype``
+    (the output window stays at the caller's width), then pushes every
+    unique quantized launch through the grid-dataflow verifier so the
+    f32-accumulator rule covers the q8 kernels too. Returns
+    ``(checked, violations, meta)`` like ``kernel-dataflow``."""
+    shapes = shapes or SWEEP_SHAPES
+    checked, out = 0, []
+    seen: set = set()
+    sampled: list = []
+
+    def _verify(kind, padded, params, dtype):
+        nonlocal checked
+        key = (kind, tuple(padded), tuple(sorted(dict(params).items())),
+               jnp.dtype(dtype).name)
+        if key in seen:
+            return
+        seen.add(key)
+        checked += 1
+        vios, info = kernel_verify.verify_kernel_config(
+            kind, padded, params, dtype, quant="int8")
+        out.extend(vios)
+        if not info["exhaustive"]:
+            sampled.append({"subject": info["subject"],
+                            "grid": list(info["grid"]),
+                            "cells": info["cells"]})
+
+    for kind, kshapes in shapes.items():
+        for shape in kshapes:
+            for spec in specs:
+                # Candidate enumeration is operand-dtype driven; price the
+                # output window at the widest caller dtype (f32).
+                for params in _candidate_dicts(kind, *shape, spec, jnp.int8):
+                    checked += 1
+                    out.extend(v for v in contracts.check_kernel_config(
+                        kind, shape, params, jnp.int8, spec,
+                        out_dtype=jnp.float32)
+                        if v.rule != "accumulator-limit")
+                for dtype in dtypes:
+                    configs = []
+                    for split in splits:
+                        if kind == "tsm2l" and split != "auto":
+                            continue  # tsm2l has no split dimension
+                        pol = tsmm.GemmPolicy(spec=spec, split=split,
+                                              quant="int8")
+                        configs.append(ops.resolve_params(
+                            kind, *shape, dtype, pol, interpret=True))
+                    for params in configs:
+                        checked += 1
+                        out.extend(v for v in contracts.check_kernel_config(
+                            kind, shape, params, jnp.int8, spec,
+                            max_b=tsmm.GemmPolicy().max_skinny_t,
+                            out_dtype=dtype)
+                            if v.rule != "accumulator-limit")
+                        padded = _padded_shape(kind, shape, params)
+                        out.extend(contracts.check_grid(kind, padded,
+                                                        params))
+                        _verify(kind, padded, params, dtype)
+                        epi = _epilogue_config(kind, padded, params, spec)
+                        if epi is not None:
+                            checked += 1
+                            out.extend(contracts.check_grid(*epi))
+    meta = {"cell_limit": kernel_verify.EXHAUSTIVE_CELL_LIMIT,
+            "sampled": sampled}
+    return checked, out, meta
+
+
 def audit_qr_configs(qr_shapes=QR_SWEEP_SHAPES, shards=QR_SWEEP_SHARDS,
                      specs=SWEEP_SPECS, splits=SWEEP_SPLITS):
     """Every (kind, shape) stage tall-skinny QR can dispatch -- per
@@ -427,6 +508,7 @@ def run_audit(*, bench_path=None, table_path=None, shapes=None) -> dict:
         "candidate-grids": audit_candidate_grids(shapes=shapes),
         "resolved-configs": audit_resolved_configs(shapes=shapes),
         "kernel-dataflow": audit_kernel_dataflow(shapes=shapes),
+        "quant-resolved": audit_quant_configs(shapes=shapes),
         "qr-resolved": audit_qr_configs(),
         "policies": audit_policies(),
     }

@@ -39,6 +39,7 @@ __all__ = [
     "Violation",
     "ceil_mult",
     "bytes_per_elem",
+    "min_sublane",
     "vmem_budget",
     "tsm2r_footprint",
     "tsm2l_footprint",
@@ -95,6 +96,22 @@ def bytes_per_elem(dtype) -> int:
     return jnp.dtype(dtype).itemsize
 
 
+def min_sublane(spec, dtype) -> int:
+    """Dtype-aware sublane quantum for ``block_m``.
+
+    4- and 2-byte dtypes keep the spec's f32 sublane granularity -- the
+    historical contract: every kernel accumulator is f32, so 8-row
+    quantization is what the pipeline actually stages. 1-byte operands
+    (the int8 quantized path) have a ``(4 * sublane, lane)`` native tile:
+    a block_m off that quantum still compiles but Mosaic pads every int8
+    window 4x -- exactly the silent drift class these contracts kill, so
+    int8 configs quantize to the full 32-row tile.
+    """
+    if bytes_per_elem(dtype) == 1:
+        return spec.sublane * 4
+    return spec.sublane
+
+
 def vmem_budget(spec) -> float:
     """Bytes of VMEM the pipeliner may use under ``spec``."""
     return spec.vmem_bytes * spec.vmem_usable
@@ -105,36 +122,48 @@ def vmem_budget(spec) -> float:
 # perf_model now delegates here, so there is exactly one copy of this math)
 # ---------------------------------------------------------------------------
 
-def tsm2r_footprint(bm: int, bk: int, n: int, dtype) -> int:
+def tsm2r_footprint(bm: int, bk: int, n: int, dtype, out_dtype=None) -> int:
     """VMEM bytes for one TSM2R grid cell: double-buffered in-streams,
-    f32 accumulator scratch, output window."""
+    f32 accumulator scratch, output window.
+
+    ``out_dtype`` prices the output window separately from the streamed
+    operands -- the quantized kernels load int8 tiles but store the
+    caller's dtype (None = same as ``dtype``, the unquantized case). The
+    quantized kernels' (1, 1) scale windows are a few bytes and ignored.
+    """
     b = bytes_per_elem(dtype)
+    ob = bytes_per_elem(out_dtype if out_dtype is not None else dtype)
     n_pad = ceil_mult(n, 128)
     a_win = 2 * bm * bk * b          # double-buffered A window
     b_win = 2 * bk * n_pad * b       # double-buffered B window
     acc = bm * n_pad * 4             # f32 accumulator scratch
-    out = bm * n_pad * b             # output window
+    out = bm * n_pad * ob            # output window
     return a_win + b_win + acc + out
 
 
-def tsm2l_footprint(bm: int, k: int, n: int, dtype) -> int:
+def tsm2l_footprint(bm: int, k: int, n: int, dtype, out_dtype=None) -> int:
     """VMEM bytes for one TSM2L grid cell: double-buffered A window, the
-    whole (k, n) B operand resident, f32 accumulator + output window."""
+    whole (k, n) B operand resident, f32 accumulator + output window
+    (priced at ``out_dtype`` when it differs -- see tsm2r_footprint)."""
     b = bytes_per_elem(dtype)
+    ob = bytes_per_elem(out_dtype if out_dtype is not None else dtype)
     return (2 * bm * ceil_mult(k, 128) * b
             + ceil_mult(k, 8) * ceil_mult(n, 128) * b
-            + bm * ceil_mult(n, 128) * (4 + b))
+            + bm * ceil_mult(n, 128) * (4 + ob))
 
 
-def tsmt_footprint(bm: int, ba: int, bdim: int, dtype) -> int:
+def tsmt_footprint(bm: int, ba: int, bdim: int, dtype, out_dtype=None) -> int:
     """VMEM bytes for one TSMT grid cell: double-buffered X and Y windows
-    plus the unblocked (ba, bdim) f32 accumulator."""
+    plus the unblocked (ba, bdim) f32 accumulator (``out_dtype`` accepted
+    for signature uniformity; the output rides the accumulator tile and
+    was never priced separately here)."""
+    del out_dtype
     b = bytes_per_elem(dtype)
     return (2 * bm * ba * b + 2 * bm * ceil_mult(bdim, 128) * b
             + ba * ceil_mult(bdim, 128) * 4)
 
 
-def kernel_footprint(kind: str, shape, params, dtype) -> int:
+def kernel_footprint(kind: str, shape, params, dtype, out_dtype=None) -> int:
     """Per-grid-cell VMEM bytes of ``params`` for ``kind`` at ``shape``.
 
     Split-invariant by construction: the split kernels stage the same
@@ -143,11 +172,13 @@ def kernel_footprint(kind: str, shape, params, dtype) -> int:
     m, d1, d2 = shape
     p = dict(params)
     if kind == "tsm2r":
-        return tsm2r_footprint(p["block_m"], p["block_k"], d2, dtype)
+        return tsm2r_footprint(p["block_m"], p["block_k"], d2, dtype,
+                               out_dtype)
     if kind == "tsm2l":
-        return tsm2l_footprint(p["block_m"], d1, d2, dtype)
+        return tsm2l_footprint(p["block_m"], d1, d2, dtype, out_dtype)
     if kind == "tsmt":
-        return tsmt_footprint(p["block_m"], p["block_a"], d2, dtype)
+        return tsmt_footprint(p["block_m"], p["block_a"], d2, dtype,
+                              out_dtype)
     raise ValueError(f"unknown kernel kind {kind!r}: valid kinds are "
                      f"{', '.join(KINDS)}")
 
@@ -168,7 +199,8 @@ def reduction_axis(kind: str, shape) -> tuple[str, int]:
 # Feasibility (the candidate-filter predicate, shared with perf_model)
 # ---------------------------------------------------------------------------
 
-def feasible(kind: str, shape, params, dtype, spec) -> bool:
+def feasible(kind: str, shape, params, dtype, spec,
+             out_dtype=None) -> bool:
     """True iff ``params`` is a launchable configuration for ``kind`` at
     ``shape`` under ``spec`` -- the exact predicate the perf model's
     candidate enumerators filter with (so the model's search space and the
@@ -187,20 +219,28 @@ def feasible(kind: str, shape, params, dtype, spec) -> bool:
     must not prune the candidate grid the perf model scores.
     """
     return not [v for v in check_kernel_config(kind, shape, params, dtype,
-                                               spec)
+                                               spec, out_dtype=out_dtype)
                 if v.rule != "accumulator-limit"]
 
 
 def check_kernel_config(kind: str, shape, params, dtype, spec, *,
-                        max_b: int | None = None) -> list[Violation]:
+                        max_b: int | None = None,
+                        out_dtype=None) -> list[Violation]:
     """Every contract violation of ``params`` (empty list == feasible).
 
     ``max_b`` overrides the TSMT accumulator limit (``GemmPolicy.
     max_skinny_t`` scopes can raise it past :data:`TSMT_MAX_B`).
+    ``out_dtype`` is the quantized-path split: ``dtype`` is what the
+    operand tiles stream as (int8 under ``GemmPolicy.quant="int8"``, which
+    also widens the sublane quantum -- :func:`min_sublane`), ``out_dtype``
+    what the kernel stores. None = same dtype, the unquantized case.
     """
     m, d1, d2 = shape
     p = dict(params)
-    subject = f"{kind} {tuple(shape)} {jnp.dtype(dtype).name} {p}"
+    subject = f"{kind} {tuple(shape)} {jnp.dtype(dtype).name}"
+    if out_dtype is not None:
+        subject += f"->{jnp.dtype(out_dtype).name}"
+    subject += f" {p}"
     out: list[Violation] = []
 
     missing = [k for k in PARAM_KEYS.get(kind, ()) if k not in p]
@@ -213,7 +253,7 @@ def check_kernel_config(kind: str, shape, params, dtype, spec, *,
 
     bm = p["block_m"]
     splits = p.get("splits", 1)
-    lane, sub = spec.lane, spec.sublane
+    lane, sub = spec.lane, min_sublane(spec, dtype)
 
     # -- positivity / integrality -------------------------------------------
     blocks = {k: v for k, v in p.items() if k.startswith("block")}
@@ -260,7 +300,7 @@ def check_kernel_config(kind: str, shape, params, dtype, spec, *,
             f"{ceil_mult(d1, lane)}"))
 
     # -- VMEM budget --------------------------------------------------------
-    fp = kernel_footprint(kind, shape, p, dtype)
+    fp = kernel_footprint(kind, shape, p, dtype, out_dtype)
     budget = vmem_budget(spec)
     if fp > budget:
         out.append(Violation(
@@ -449,7 +489,9 @@ def check_backward_policy(fwd, bwd) -> list[Violation]:
       "auto"/"never" are preserved (scope-wide intent);
     * the executor pin is dropped (a pinned shard_map executor must not
       recurse per-shard);
-    * a forward-kind force degrades to "auto"; "dense"/"auto" survive.
+    * a forward-kind force degrades to "auto"; "dense"/"auto" survive;
+    * ``quant`` is preserved verbatim (scope-wide numeric intent: an int8
+      scope keeps its cotangent GEMMs quantizable).
     """
     subject = f"backward_policy({fwd!r})"
     out = []
@@ -476,6 +518,13 @@ def check_backward_policy(fwd, bwd) -> list[Violation]:
             "backward-mode", subject,
             f"backward mode={bwd.mode!r}, expected {want_mode!r} "
             f"(forward mode={fwd.mode!r})"))
+    want_quant = getattr(fwd, "quant", "none")
+    if getattr(bwd, "quant", "none") != want_quant:
+        out.append(Violation(
+            "backward-quant", subject,
+            f"backward quant={getattr(bwd, 'quant', 'none')!r}, expected "
+            f"{want_quant!r}: quant is scope-wide numeric intent and must "
+            "survive the VJP re-dispatch"))
     return out
 
 

@@ -120,7 +120,7 @@ def _unjit(fn):
     return getattr(fn, "__wrapped__", fn)
 
 
-def capture_kernel(kind, padded_shape, params, dtype
+def capture_kernel(kind, padded_shape, params, dtype, *, quant="none"
                    ) -> list[compat.LaunchCapture]:
     """Launch captures of the committed ``kind`` entry at ``padded_shape``.
 
@@ -128,45 +128,100 @@ def capture_kernel(kind, padded_shape, params, dtype
     shape after ``ops``' zero-padding (``audit._padded_shape``), or the
     ``(splits, rows, cols)`` partials stack for ``kind="reduce"`` -- so
     the abstract invocation is exactly the launch dispatch performs.
+
+    ``quant="int8"`` captures the quantized entry instead: int8 operand
+    avals plus the f32 scale sidecars (``(m//block_m, 1)`` per-row-block
+    for streamed operands, ``(1, 1)`` per-tensor for the resident B of
+    tsm2r/tsm2l), with ``dtype`` becoming the kernel's ``out_dtype``.
+    ``kind="reduce"`` has no quantized variant (split partials are f32
+    either way).
     """
+    from repro.kernels import quant as kquant
     from repro.kernels import reduce as kreduce
     from repro.kernels import tsm2l, tsm2r, tsmt
 
     p = dict(params)
     s = p.get("splits", 1)
     dtype = jnp.dtype(dtype)
+    q8 = quant == "int8"
+    if q8 and kind == "reduce":
+        raise ValueError("kind='reduce' has no quantized variant")
+    f32 = jnp.float32
     if kind == "tsm2r":
         m, k, n = padded_shape
-        args = (jax.ShapeDtypeStruct((m, k), dtype),
-                jax.ShapeDtypeStruct((k, n), dtype))
-        if s == 1:
-            fn = functools.partial(_unjit(tsm2r.tsm2r_pallas),
-                                   block_m=p["block_m"],
-                                   block_k=p["block_k"], interpret=True)
+        if q8:
+            args = (jax.ShapeDtypeStruct((m, k), jnp.int8),
+                    jax.ShapeDtypeStruct((k, n), jnp.int8),
+                    jax.ShapeDtypeStruct((m // p["block_m"], 1), f32),
+                    jax.ShapeDtypeStruct((1, 1), f32))
+            if s == 1:
+                fn = functools.partial(_unjit(kquant.tsm2r_q8_pallas),
+                                       out_dtype=dtype,
+                                       block_m=p["block_m"],
+                                       block_k=p["block_k"], interpret=True)
+            else:
+                # Split partials are f32 regardless of caller dtype.
+                fn = functools.partial(_unjit(kquant.tsm2r_q8_pallas_split),
+                                       block_m=p["block_m"],
+                                       block_k=p["block_k"], splits=s,
+                                       interpret=True)
         else:
-            fn = functools.partial(_unjit(tsm2r.tsm2r_pallas_split),
-                                   block_m=p["block_m"],
-                                   block_k=p["block_k"], splits=s,
-                                   interpret=True)
+            args = (jax.ShapeDtypeStruct((m, k), dtype),
+                    jax.ShapeDtypeStruct((k, n), dtype))
+            if s == 1:
+                fn = functools.partial(_unjit(tsm2r.tsm2r_pallas),
+                                       block_m=p["block_m"],
+                                       block_k=p["block_k"], interpret=True)
+            else:
+                fn = functools.partial(_unjit(tsm2r.tsm2r_pallas_split),
+                                       block_m=p["block_m"],
+                                       block_k=p["block_k"], splits=s,
+                                       interpret=True)
     elif kind == "tsm2l":
         m, k, n = padded_shape
-        args = (jax.ShapeDtypeStruct((m, k), dtype),
-                jax.ShapeDtypeStruct((k, n), dtype))
-        fn = functools.partial(_unjit(tsm2l.tsm2l_pallas),
-                               block_m=p["block_m"], interpret=True)
+        if q8:
+            args = (jax.ShapeDtypeStruct((m, k), jnp.int8),
+                    jax.ShapeDtypeStruct((k, n), jnp.int8),
+                    jax.ShapeDtypeStruct((m // p["block_m"], 1), f32),
+                    jax.ShapeDtypeStruct((1, 1), f32))
+            fn = functools.partial(_unjit(kquant.tsm2l_q8_pallas),
+                                   out_dtype=dtype, block_m=p["block_m"],
+                                   interpret=True)
+        else:
+            args = (jax.ShapeDtypeStruct((m, k), dtype),
+                    jax.ShapeDtypeStruct((k, n), dtype))
+            fn = functools.partial(_unjit(tsm2l.tsm2l_pallas),
+                                   block_m=p["block_m"], interpret=True)
     elif kind == "tsmt":
         m, a, b = padded_shape
-        args = (jax.ShapeDtypeStruct((m, a), dtype),
-                jax.ShapeDtypeStruct((m, b), dtype))
-        if s == 1:
-            fn = functools.partial(_unjit(tsmt.tsmt_pallas),
-                                   block_m=p["block_m"],
-                                   block_a=p["block_a"], interpret=True)
+        if q8:
+            args = (jax.ShapeDtypeStruct((m, a), jnp.int8),
+                    jax.ShapeDtypeStruct((m, b), jnp.int8),
+                    jax.ShapeDtypeStruct((m // p["block_m"], 1), f32),
+                    jax.ShapeDtypeStruct((m // p["block_m"], 1), f32))
+            if s == 1:
+                fn = functools.partial(_unjit(kquant.tsmt_q8_pallas),
+                                       out_dtype=dtype,
+                                       block_m=p["block_m"],
+                                       block_a=p["block_a"], interpret=True)
+            else:
+                # Split partials are f32 regardless of caller dtype.
+                fn = functools.partial(_unjit(kquant.tsmt_q8_pallas_split),
+                                       block_m=p["block_m"],
+                                       block_a=p["block_a"], splits=s,
+                                       interpret=True)
         else:
-            fn = functools.partial(_unjit(tsmt.tsmt_pallas_split),
-                                   block_m=p["block_m"],
-                                   block_a=p["block_a"], splits=s,
-                                   interpret=True)
+            args = (jax.ShapeDtypeStruct((m, a), dtype),
+                    jax.ShapeDtypeStruct((m, b), dtype))
+            if s == 1:
+                fn = functools.partial(_unjit(tsmt.tsmt_pallas),
+                                       block_m=p["block_m"],
+                                       block_a=p["block_a"], interpret=True)
+            else:
+                fn = functools.partial(_unjit(tsmt.tsmt_pallas_split),
+                                       block_m=p["block_m"],
+                                       block_a=p["block_a"], splits=s,
+                                       interpret=True)
     elif kind == "reduce":
         stack, rows, cols = padded_shape
         args = (jax.ShapeDtypeStruct((stack, rows, cols), jnp.float32),)
@@ -494,7 +549,7 @@ def verify_capture(cap, *, subject: str | None = None) -> list[Violation]:
     return out
 
 
-def verify_kernel_config(kind, padded_shape, params, dtype
+def verify_kernel_config(kind, padded_shape, params, dtype, *, quant="none"
                          ) -> tuple[list[Violation], dict]:
     """Capture + verify one committed kernel configuration.
 
@@ -503,12 +558,15 @@ def verify_kernel_config(kind, padded_shape, params, dtype
     section logs non-exhaustive entries. Beyond :func:`verify_capture`'s
     families this proves ``launch-meta-drift``: the captured grid and
     semantics equal the pure ``contracts.launch_grid`` derivation the
-    dispatcher stamps onto ``DispatchEvent.launches``.
+    dispatcher stamps onto ``DispatchEvent.launches`` (quantized launches
+    share the unquantized grid derivation -- the scale sidecars add
+    BlockSpecs, not grid dims).
     """
     p = dict(params)
+    tag = " int8" if quant == "int8" else ""
     sub = (f"{kind} padded {tuple(padded_shape)} "
-           f"{jnp.dtype(dtype).name} {p}")
-    caps = capture_kernel(kind, padded_shape, p, dtype)
+           f"{jnp.dtype(dtype).name}{tag} {p}")
+    caps = capture_kernel(kind, padded_shape, p, dtype, quant=quant)
     if not caps:
         return ([Violation(
             "capture-empty", sub,

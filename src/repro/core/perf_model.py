@@ -362,8 +362,8 @@ def choose_params_tsm2r(m: int, k: int, n: int, spec: TPUSpec = V5E,
     residual ties toward larger block_m (fewer B-window re-fetches).
     """
     cands = tsm2r_candidates(m, k, n, spec, dtype)
-    if not cands:  # tiny problem: single block
-        return (min(_roundup(m, spec.sublane), 256),
+    if not cands:  # tiny problem: single block (dtype-aware row quantum)
+        return (min(_roundup(m, contracts.min_sublane(spec, dtype)), 256),
                 min(_roundup(k, spec.lane), 128), 1)
     scored = [(tsm2r_model_time(m, k, n, bm, bk, spec, dtype, splits=s),
                (bm, bk, s))
@@ -395,8 +395,8 @@ def choose_params_tsmt(m: int, a: int, bdim: int, spec: TPUSpec = V5E,
     the other choosers.
     """
     cands = tsmt_candidates(m, a, bdim, spec, dtype)
-    if not cands:
-        return (min(_roundup(m, spec.sublane), 256),
+    if not cands:  # tiny problem: single block (dtype-aware row quantum)
+        return (min(_roundup(m, contracts.min_sublane(spec, dtype)), 256),
                 min(_roundup(a, spec.lane), 128), 1)
     scored = [(tsmt_model_time(m, a, bdim, bm, ba, spec, dtype, splits=s),
                (bm, ba, s))

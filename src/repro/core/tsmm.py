@@ -140,6 +140,7 @@ _MMT_KINDS = ("auto", "dense", "tsmt")
 _ALL_MODES = ("auto", "dense", "tsm2r", "tsm2l", "tsmt")
 _SHARD_MAP_MODES = ("auto", "never", "require", "local")
 _REDUCE_MODES = ("psum", "psum_scatter", "none")
+_QUANT_MODES = ("none", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -249,6 +250,26 @@ class GemmPolicy:
     shard_map executors each shard splits its own slice locally and the
     psum/psum_scatter/none contract on the cross-shard reduction is
     unchanged -- ``reduce=`` and ``split`` compose freely.
+
+    ``quant``: low-precision operand storage for the Pallas kernel paths
+    (``kernels/quant.py``):
+
+    * "none" (default) -- operands stream at their own dtype; nothing
+      changes anywhere.
+    * "int8" -- operands are symmetrically quantized per resolved kernel
+      row block (tall operand; the small operand gets one per-tensor
+      scale), streamed as int8 tiles, and dequantized in the f32
+      accumulate epilogue; outputs return in the caller's dtype. Block
+      resolution, tuning-table lookups and contract checks all run
+      against the int8 *effective dtype* (1 byte/elem HBM pricing, 32-row
+      sublane tiles), so autotuned grids are measured for what actually
+      launches. Only the kernel executors quantize: "dense-xla" ignores
+      the knob (a dense fallback is exact, never silently low-precision),
+      and split partials are dequantized before they leave the kernel so
+      the reduce tree and shard_map collectives are unchanged. Scope-wide
+      numeric intent, so :func:`backward_policy` preserves it -- cotangent
+      GEMMs under an int8 scope quantize too (expect looser gradient
+      tolerances, as with any quantization-aware setup).
     """
 
     mode: str = "auto"
@@ -266,6 +287,7 @@ class GemmPolicy:
     tuning_table: object | None = None
     reduce: str = "psum"
     split: str | int = "auto"
+    quant: str = "none"
     # Trace-time contract assertion: when set, kernels/ops re-checks every
     # resolved launch configuration against analysis.contracts (the same
     # predicates the perf model's candidate filter and the offline auditor
@@ -295,6 +317,10 @@ class GemmPolicy:
             raise ValueError(
                 f"unknown GemmPolicy reduce {self.reduce!r}: valid "
                 f"values are {', '.join(_REDUCE_MODES)}")
+        if self.quant not in _QUANT_MODES:
+            raise ValueError(
+                f"unknown GemmPolicy quant {self.quant!r}: valid "
+                f"values are {', '.join(_QUANT_MODES)}")
 
     def with_(self, **overrides) -> "GemmPolicy":
         return dataclasses.replace(self, **overrides)
@@ -385,7 +411,10 @@ def backward_policy(p: GemmPolicy) -> GemmPolicy:
     backward land sharded without an extra all-gather. An *int* ``split``
     pin is stripped to "auto" (it was chosen for the forward shape; the
     cotangent GEMMs pick their own), while "never" is preserved -- it is
-    scope-wide intent, like a dense pin."""
+    scope-wide intent, like a dense pin. ``quant`` is likewise preserved
+    (``dataclasses.replace`` carries it): an int8 scope keeps its
+    cotangent GEMMs quantizable, per the contracts ``backward-quant``
+    rule."""
     mode = p.mode if p.mode in ("auto", "dense") else "auto"
     reduce_ = "psum" if p.reduce == "none" else p.reduce
     split = "auto" if isinstance(p.split, int) else p.split
@@ -457,7 +486,9 @@ class DispatchEvent:
     """One routing decision: which entry, classified kind, chosen executor,
     and the (tall, minor, minor) shape it was made for. Emitted at trace
     time -- a cached jit call emits nothing. ``split`` records the policy's
-    split knob at dispatch ("auto" | "never" | a pinned int); ``launches``
+    split knob at dispatch ("auto" | "never" | a pinned int); ``quant``
+    records the quantization knob ("none" | "int8") so spies can assert a
+    quantized scope actually reached a quantized launch; ``launches``
     carries one :class:`LaunchMeta` per Pallas launch the executor's trace
     noted (via :func:`note_launch`) -- the resolved grid, semantics and S,
     so spies can assert grid shape, not just routing. Dense/XLA arms note
@@ -469,6 +500,7 @@ class DispatchEvent:
     executor: str    # registry key
     shape: tuple[int, int, int]
     split: str | int = "auto"
+    quant: str = "none"
     launches: tuple = ()       # of LaunchMeta
 
 
@@ -491,10 +523,11 @@ def note_launch(kind: str, grid, dimension_semantics, splits: int = 1
 
 
 def _notify(entry: str, kind: str, executor: str, shape,
-            split: str | int = "auto", launches: tuple = ()) -> None:
+            split: str | int = "auto", quant: str = "none",
+            launches: tuple = ()) -> None:
     if _LISTENERS:
         ev = DispatchEvent(entry, kind, executor, tuple(shape), split,
-                           launches)
+                           quant, launches)
         for cb in tuple(_LISTENERS):
             cb(ev)
 
@@ -511,7 +544,8 @@ def _dispatch(entry: str, kind: str, executor: str, shape, policy, run):
         out = run()
     finally:
         _LAUNCH_NOTES.pop()
-        _notify(entry, kind, executor, shape, policy.split, tuple(notes))
+        _notify(entry, kind, executor, shape, policy.split, policy.quant,
+                tuple(notes))
     return out
 
 

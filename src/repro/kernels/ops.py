@@ -40,6 +40,15 @@ forbids.
 
 ``spec=`` / ``interpret=`` kwargs are kept as per-call overrides of the
 corresponding policy fields (prefer ``with tsmm.policy(...)`` scopes).
+
+Under ``GemmPolicy.quant="int8"`` each impl quantizes its padded operands
+(per-resolved-row-block scales for the tall operand, per-tensor for the
+small one -- ``kernels/quant.py``) and launches the quantized kernel
+variant; parameter resolution, tuning-table lookups and contract checks
+all run against the int8 *effective dtype*, so the grid that is scored,
+tuned and audited is the grid that launches. Outputs (and split partials,
+which are dequantized in-kernel) keep the unquantized path's dtypes
+exactly, so the reduce epilogue and the VJP rules below are unchanged.
 """
 
 from __future__ import annotations
@@ -53,6 +62,7 @@ import jax.numpy as jnp
 from repro.analysis import contracts
 from repro.core import perf_model
 from repro.kernels import compat, ref
+from repro.kernels import quant as kquant
 from repro.kernels.reduce import epilogue_block_r, reduce_partials
 from repro.kernels.tsm2l import tsm2l_pallas
 from repro.kernels.tsm2r import tsm2r_pallas, tsm2r_pallas_split
@@ -179,7 +189,10 @@ def _resolve_tsm2r(m, k, n, dtype, policy, block_m, block_k, splits,
         block_k = block_k or bk
         if splits is None:
             splits = s
-    block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
+    # Sublane quantum is dtype-aware (int8 tiles are 32 rows deep); for
+    # f32/bf16 this is exactly spec.sublane, as before.
+    block_m = min(block_m, _ceil_mult(m, contracts.min_sublane(policy.spec,
+                                                               dtype)))
     # block_k is a lane dim of the A window: clamp with the same lane
     # quantization the perf model's candidate filter uses, so the block the
     # kernel runs is the block the VMEM budget was checked against.
@@ -204,7 +217,8 @@ def _resolve_tsm2l(m, k, n, dtype, policy, block_m, interpret):
                    perf_model.choose_params_tsm2l(
                        m, k, n, _analytic_spec(policy, "tsm2l", (m, k, n),
                                                dtype), dtype))
-    block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
+    block_m = min(block_m, _ceil_mult(m, contracts.min_sublane(policy.spec,
+                                                               dtype)))
     return {"block_m": block_m}
 
 
@@ -228,15 +242,15 @@ def _resolve_tsmt(m, a_dim, b_dim, dtype, policy, block_m, block_a, splits,
         block_a = block_a or ba
         if splits is None:
             splits = s
-    block_m = min(block_m, _ceil_mult(m, policy.spec.sublane))
+    sub = contracts.min_sublane(policy.spec, dtype)
+    block_m = min(block_m, _ceil_mult(m, sub))
     # block_a is a lane dim of the X window: lane-quantized clamp, matching
     # the perf model's candidate filter (see _resolve_tsm2r).
     block_a = min(block_a, _ceil_mult(a_dim, policy.spec.lane))
     if splits > 1 and not explicit_bm:
         # honor a pinned S by shrinking the reduction block (m here);
         # an explicit block_m kwarg wins and S clamps instead.
-        block_m = min(block_m,
-                      _ceil_mult(-(-m // splits), policy.spec.sublane))
+        block_m = min(block_m, _ceil_mult(-(-m // splits), sub))
     # m is the reduction here: each slice must own >= one m block.
     splits = max(1, min(splits, -(-m // block_m)))
     return {"block_m": block_m, "block_a": block_a, "splits": splits}
@@ -260,25 +274,60 @@ def resolve_params(kind: str, m: int, d1: int, d2: int, dtype, policy, *,
     asserted against ``analysis.contracts.check_kernel_config`` under the
     same effective spec the chooser ran with; a violation raises
     ``ValueError`` (trace time, never on-device).
+
+    Under ``policy.quant="int8"`` the whole resolution runs against the
+    int8 *effective dtype* -- tuning-table lookups (dtype is already a key
+    dimension, so quantized grids get their own measured winners with no
+    schema fork), the analytic chooser's byte pricing, the clamps' wider
+    32-row sublane quantum, and the contract check (which then prices the
+    output window at the caller's ``dtype``). ``verify_contracts`` scopes
+    additionally *reject* explicitly pinned blocks the int8 quantization
+    would silently re-quantize, mirroring the lane-clamp contract: a pin
+    that survives unchanged on the f32 path can be off the 32-row quantum
+    or clamped to a different value under int8, and a quantized launch the
+    caller didn't ask for must fail loudly.
     """
     if interpret is None:
         interpret = _resolve_interpret(policy)
+    quant = getattr(policy, "quant", "none") == "int8"
+    eff_dtype = jnp.int8 if quant else dtype
     if kind == "tsm2r":
-        params = _resolve_tsm2r(m, d1, d2, dtype, policy, block_m, block_k,
-                                splits, interpret)
+        params = _resolve_tsm2r(m, d1, d2, eff_dtype, policy, block_m,
+                                block_k, splits, interpret)
     elif kind == "tsm2l":
-        params = _resolve_tsm2l(m, d1, d2, dtype, policy, block_m, interpret)
+        params = _resolve_tsm2l(m, d1, d2, eff_dtype, policy, block_m,
+                                interpret)
     elif kind == "tsmt":
-        params = _resolve_tsmt(m, d1, d2, dtype, policy, block_m, block_a,
-                               splits, interpret)
+        params = _resolve_tsmt(m, d1, d2, eff_dtype, policy, block_m,
+                               block_a, splits, interpret)
     else:
         raise ValueError(f"unknown kernel kind {kind!r}: valid kinds are "
                          f"{', '.join(contracts.KINDS)}")
     if getattr(policy, "verify_contracts", False):
-        eff_spec = _analytic_spec(policy, kind, (m, d1, d2), dtype)
+        if quant:
+            sub = contracts.min_sublane(policy.spec, eff_dtype)
+            bad = []
+            for name, pin in (("block_m", block_m), ("block_k", block_k),
+                              ("block_a", block_a)):
+                if pin is None or name not in params:
+                    continue
+                q = sub if name == "block_m" else policy.spec.lane
+                if pin % q != 0 or params[name] != pin:
+                    bad.append(
+                        f"[pinned-block-quant] {name}={pin} is infeasible "
+                        f"under the int8 tile quantization (quantum {q}; "
+                        f"resolution would re-quantize it to "
+                        f"{params[name]})")
+            if bad:
+                raise ValueError(
+                    "GemmPolicy.verify_contracts: explicit block pin(s) "
+                    "rejected rather than silently re-quantized under "
+                    "quant='int8': " + "; ".join(bad))
+        eff_spec = _analytic_spec(policy, kind, (m, d1, d2), eff_dtype)
         violations = contracts.check_kernel_config(
-            kind, (m, d1, d2), params, dtype, eff_spec,
-            max_b=getattr(policy, "max_skinny_t", None))
+            kind, (m, d1, d2), params, eff_dtype, eff_spec,
+            max_b=getattr(policy, "max_skinny_t", None),
+            out_dtype=dtype if quant else None)
         if violations:
             raise ValueError(
                 "GemmPolicy.verify_contracts: resolved kernel config "
@@ -298,20 +347,36 @@ def _tsm2r_impl(a, b, block_m, block_k, splits, policy):
     p = resolve_params("tsm2r", m, k, n, a.dtype, policy, block_m=block_m,
                        block_k=block_k, splits=splits, interpret=interpret)
     block_m, block_k, splits = p["block_m"], p["block_k"], p["splits"]
+    quant = getattr(policy, "quant", "none") == "int8"
     if splits == 1:
         a_p = _pad_to(_pad_to(a, 0, block_m), 1, block_k)
         b_p = _pad_to(b, 0, block_k)
         _note_launch("tsm2r", (a_p.shape[0], a_p.shape[1], n), p)
-        out = tsm2r_pallas(a_p, b_p, block_m=block_m, block_k=block_k,
-                           interpret=interpret)
+        if quant:
+            a_q, a_s = kquant.quantize_blocks(a_p, block_m)
+            b_q, b_s = kquant.quantize_tensor(b_p)
+            out = kquant.tsm2r_q8_pallas(
+                a_q, b_q, a_s, b_s, out_dtype=a.dtype, block_m=block_m,
+                block_k=block_k, interpret=interpret)
+        else:
+            out = tsm2r_pallas(a_p, b_p, block_m=block_m, block_k=block_k,
+                               interpret=interpret)
         return out[:m]
     # Split reduction: pad k so every slice is whole (zero-padding is exact
     # for GEMM, so m % (S*bk) non-multiples cost only the padded stream).
     a_p = _pad_to(_pad_to(a, 0, block_m), 1, splits * block_k)
     b_p = _pad_to(b, 0, splits * block_k)
     _note_launch("tsm2r", (a_p.shape[0], a_p.shape[1], n), p)
-    parts = tsm2r_pallas_split(a_p, b_p, block_m=block_m, block_k=block_k,
-                               splits=splits, interpret=interpret)
+    if quant:
+        a_q, a_s = kquant.quantize_blocks(a_p, block_m)
+        b_q, b_s = kquant.quantize_tensor(b_p)
+        parts = kquant.tsm2r_q8_pallas_split(
+            a_q, b_q, a_s, b_s, block_m=block_m, block_k=block_k,
+            splits=splits, interpret=interpret)
+    else:
+        parts = tsm2r_pallas_split(a_p, b_p, block_m=block_m,
+                                   block_k=block_k, splits=splits,
+                                   interpret=interpret)
     br = epilogue_block_r(splits, a_p.shape[0], n, block_r=block_m,
                           vmem_budget=_vmem_budget(policy))
     if br is not None:
@@ -374,7 +439,13 @@ def _tsm2l_impl(a, b, block_m, policy):
                              block_m=block_m, interpret=interpret)["block_m"]
     a_p = _pad_to(a, 0, block_m)
     _note_launch("tsm2l", (a_p.shape[0], k, n), {"block_m": block_m})
-    out = tsm2l_pallas(a_p, b, block_m=block_m, interpret=interpret)
+    if getattr(policy, "quant", "none") == "int8":
+        a_q, a_s = kquant.quantize_blocks(a_p, block_m)
+        b_q, b_s = kquant.quantize_tensor(b)
+        out = kquant.tsm2l_q8_pallas(a_q, b_q, a_s, b_s, out_dtype=a.dtype,
+                                     block_m=block_m, interpret=interpret)
+    else:
+        out = tsm2l_pallas(a_p, b, block_m=block_m, interpret=interpret)
     return out[:m]
 
 
@@ -422,20 +493,36 @@ def _tsmt_impl(x, y, block_m, block_a, splits, policy):
                        block_m=block_m, block_a=block_a, splits=splits,
                        interpret=interpret)
     block_m, block_a, splits = p["block_m"], p["block_a"], p["splits"]
+    quant = getattr(policy, "quant", "none") == "int8"
     if splits == 1:
         x_p = _pad_to(_pad_to(x, 0, block_m), 1, block_a)
         y_p = _pad_to(y, 0, block_m)
         _note_launch("tsmt", (x_p.shape[0], x_p.shape[1], b_dim), p)
-        out = tsmt_pallas(x_p, y_p, block_m=block_m, block_a=block_a,
-                          interpret=interpret)
+        if quant:
+            x_q, x_s = kquant.quantize_blocks(x_p, block_m)
+            y_q, y_s = kquant.quantize_blocks(y_p, block_m)
+            out = kquant.tsmt_q8_pallas(
+                x_q, y_q, x_s, y_s, out_dtype=x.dtype, block_m=block_m,
+                block_a=block_a, interpret=interpret)
+        else:
+            out = tsmt_pallas(x_p, y_p, block_m=block_m, block_a=block_a,
+                              interpret=interpret)
         return out[:a_dim]
     # Split reduction over m: pad to whole slices (zeros contribute
     # nothing to the partial sums), reduce the (S, a, b) f32 stack.
     x_p = _pad_to(_pad_to(x, 0, splits * block_m), 1, block_a)
     y_p = _pad_to(y, 0, splits * block_m)
     _note_launch("tsmt", (x_p.shape[0], x_p.shape[1], b_dim), p)
-    parts = tsmt_pallas_split(x_p, y_p, block_m=block_m, block_a=block_a,
-                              splits=splits, interpret=interpret)
+    if quant:
+        x_q, x_s = kquant.quantize_blocks(x_p, block_m)
+        y_q, y_s = kquant.quantize_blocks(y_p, block_m)
+        parts = kquant.tsmt_q8_pallas_split(
+            x_q, y_q, x_s, y_s, block_m=block_m, block_a=block_a,
+            splits=splits, interpret=interpret)
+    else:
+        parts = tsmt_pallas_split(x_p, y_p, block_m=block_m,
+                                  block_a=block_a, splits=splits,
+                                  interpret=interpret)
     br = epilogue_block_r(splits, x_p.shape[1], b_dim, block_r=block_a,
                           vmem_budget=_vmem_budget(policy))
     if br is not None:

@@ -19,7 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tsmm
+from repro.kernels import quant as kquant
 from repro.models import model
+
+# Model params arrive in f32 unless quantized records say otherwise.
+_WEIGHT_DTYPE = jnp.float32
 
 
 def make_serve_fns(cfg, policy: "tsmm.GemmPolicy | None" = None, *,
@@ -40,6 +44,16 @@ def make_serve_fns(cfg, policy: "tsmm.GemmPolicy | None" = None, *,
     everywhere else: off-mesh or for shapes that cannot scatter, dispatch
     degrades exactly like the default path). DP axes follow the launch
     mesh via ``tsmm.derive_dp_axes`` unless the policy pins ``dp_axes``.
+
+    Pre-quantized weights (``kernels.quant.quantize_weights`` records:
+    ``{"q8": int8, "q8_scale": f32}`` leaves with offline per-tile
+    scales) are accepted directly: the step bodies dequantize at entry,
+    inside the jit trace, so the *stored/transferred* params stay at 1
+    byte/elem + the tiny scale sidecar while the model code sees plain
+    f32 arrays. (XLA commonly fuses the dequant into the first consumer;
+    the fully-fused path -- int8 tiles all the way into the Pallas GEMMs
+    via ``GemmPolicy(quant="int8")`` -- re-quantizes activations on the
+    fly and is the policy knob, not the storage format.)
     """
     def _scope():
         base = policy
@@ -51,10 +65,12 @@ def make_serve_fns(cfg, policy: "tsmm.GemmPolicy | None" = None, *,
 
     def prefill_step(params, batch, cache):
         with _scope():
+            params = kquant.dequantize_weights(params, _WEIGHT_DTYPE)
             return model.prefill(params, cfg, batch, cache)
 
     def decode_step(params, tokens, pos, cache):
         with _scope():
+            params = kquant.dequantize_weights(params, _WEIGHT_DTYPE)
             return model.decode_step(params, cfg, tokens, pos, cache)
 
     return prefill_step, decode_step

@@ -16,6 +16,9 @@ addressable-shard shapes (no ``jax.debug.visualize`` parsing):
   executor and the parameter grad arrives sharded -- no all-gather;
 * the sharded PowerSGD protocol (``compress_one_sharded``) matches the
   replicated-psum oracle numerically, with the Q factor state sharded;
+* PowerSGD ``compress="int8"`` keeps the sharded schedule consistent
+  with the replicated oracle within the quantization envelope, shards
+  stay bit-consistent row slabs of the assembled factor;
 * ``dp_axes`` derivation: an unconventionally named single-axis mesh
   ("replica") still routes through shard_map.
 
@@ -168,6 +171,43 @@ np.testing.assert_allclose(np.asarray(q_sq), np.asarray(st_oq["q"]),
                            rtol=1e-4, atol=1e-4)
 assert {s.data.shape for s in q_sq.addressable_shards} == {(d2 // 2, cfg_qr.rank)}
 assert {e.executor for e in log} == {"pallas-tpu"}, log
+
+# --- PowerSGD compress="int8": quantized factor collectives --------------
+# Each rank symmetric-quantizes its local P/Q projection immediately
+# before the DP collective (the int8 wire format). The sharded schedule
+# must stay consistent with the replicated oracle within the
+# quantization envelope (per-rank noise <= half a step of the local
+# absmax -- NOT bit-exact like the f32 arms above), and the Q factor
+# state must stay row-sharded.
+cfg_i8 = powersgd.PowerSGDConfig(rank=4, min_size=0, compress="int8")
+approx_oi, st_oi = powersgd.compress_one(cfg_i8, grads.mean(0), state0["w"])
+
+
+def body_i8(g_local):
+    st = powersgd.shard_state(state0, "data")["w"]
+    approx, st2 = powersgd.compress_one_sharded(cfg_i8, g_local[0], st, axis="data")
+    return approx, st2["q"]
+
+
+f_i8 = compat.shard_map(
+    body_i8,
+    mesh=mesh,
+    in_specs=(P("data", None, None),),
+    out_specs=(P(None, None), P("data", None)),
+)
+with mesh:
+    approx_si, q_si = jax.jit(f_i8)(grads)
+tol_a = 2e-2 * np.abs(np.asarray(approx_oi)).max()
+assert np.abs(np.asarray(approx_si) - np.asarray(approx_oi)).max() <= tol_a
+tol_q = 2e-2 * np.abs(np.asarray(st_oi["q"])).max()
+assert np.abs(np.asarray(q_si) - np.asarray(st_oi["q"])).max() <= tol_q
+assert {s.data.shape for s in q_si.addressable_shards} == {(d2 // 2, cfg_i8.rank)}
+# the assembled Q is exactly its row shards stacked in order: the scatter
+# left each rank a bit-consistent slab of the quantized-mean factor
+slabs = sorted(q_si.addressable_shards, key=lambda s: s.index[0].start or 0)
+np.testing.assert_array_equal(
+    np.asarray(q_si), np.concatenate([np.asarray(s.data) for s in slabs])
+)
 
 # --- split reduction per shard: collective contracts unchanged -----------
 # GemmPolicy.split composes with reduce=: partials are summed inside each
