@@ -1,0 +1,73 @@
+"""abft_overhead: online checksum guard arms vs the unguarded baseline.
+
+Per protected shape, three jit-cache-isolated arms (``timeit_arm``):
+
+* ``abft_none`` -- ``GemmPolicy(abft="none")``; the arm FAILS unless the
+  trace contains exactly ONE dispatch (zero structural overhead: no
+  checksum GEMMs, no guard math in the jaxpr).
+* ``abft_verify`` / ``abft_correct`` -- the guarded arms; each must
+  dispatch exactly four GEMMs (protected + u + c_ref + c_out per
+  ``contracts.abft_stage_shapes``) with the guard mode stamped on
+  exactly one event.
+
+The checksum passes are bandwidth-bound at these shapes (skinny s=2
+operands), so on real hardware the verify overhead is a small multiple
+of the protected GEMM's own HBM traffic; on this CPU container the wall
+times are interpret-mode mechanism numbers (see common.py's measurement
+policy) and the gated signal is the dispatch structure, mirrored into
+``common.dispatch_sanity`` for the committed-baseline gate.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, rand, timeit_arm
+from repro.core import tsmm
+
+# Protected shapes: the canonical tsm2r bench shape and a tsmt
+# (PowerSGD/ABFT-encode style) shape.
+MM_SHAPE = (4096, 512, 8)
+MMT_SHAPE = (65536, 16, 16)
+
+
+def _arm(fn, args, mode, expect, want_events):
+    us, log = timeit_arm(fn, *args, policy=tsmm.GemmPolicy(abft=mode),
+                         expect_executors=expect)
+    flagged = [e for e in log if e.abft == mode]
+    if len(log) != want_events:
+        raise AssertionError(
+            f"abft={mode!r} arm dispatched {len(log)} GEMMs, expected "
+            f"{want_events}; log: {log}")
+    if mode != "none" and len(flagged) != 1:
+        raise AssertionError(
+            f"abft={mode!r} arm stamped {len(flagged)} guarded events, "
+            f"expected exactly 1; log: {log}")
+    return us, len(log)
+
+
+def run():
+    rows = []
+    for name, shape, fn in (
+        ("tsm2r", MM_SHAPE,
+         lambda a_, b_: tsmm.tsmm(a_, b_)),
+        ("tsmt", MMT_SHAPE,
+         lambda x_, y_: tsmm.tsmm_t(x_, y_)),
+    ):
+        m, d1, d2 = shape
+        if name == "tsmt":
+            args = (rand(0, (m, d1)), rand(1, (m, d2)))
+        else:
+            args = (rand(0, (m, d1)), rand(1, (d1, d2)))
+        base_us, n_base = _arm(fn, args, "none", {"pallas-tpu"}, 1)
+        rows.append((f"abft_none_{name}", f"{base_us:.1f}",
+                     f"events={n_base};zero-overhead"))
+        for mode in ("verify", "correct"):
+            us, n_ev = _arm(fn, args, mode,
+                            {"pallas-tpu", "dense-xla"}, 4)
+            rows.append((f"abft_{mode}_{name}", f"{us:.1f}",
+                         f"events={n_ev};x{us / max(base_us, 1e-9):.2f}"
+                         " vs none"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

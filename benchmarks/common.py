@@ -117,6 +117,31 @@ def dispatch_sanity(m: int = 4096, k: int = 512, n: int = 8):
                 "quant": quants_seen,
                 "ok": (observed == ["pallas-tpu"]
                        and quants_seen == ["int8"])})
+    # Online-ABFT arms. abft="none" is the zero-overhead contract: exactly
+    # ONE dispatch, no checksum GEMMs in the trace. The guarded modes must
+    # dispatch exactly four GEMMs (protected + the three checksum stages of
+    # ``contracts.abft_stage_shapes``) with the mode stamped on exactly one
+    # event (``DispatchEvent.abft``) -- a wrap that guards the checksum
+    # GEMMs recursively, or stops stamping, fails the arm even though the
+    # executors look right.
+    _, log = jit_isolated(lambda a_, b_: tsmm.tsmm(a_, b_), a, b,
+                          policy=tsmm.GemmPolicy(abft="none"))
+    observed = sorted({e.executor for e in log})
+    out.append({"arm": "abft_none", "shape": [m, k, n],
+                "expected": "pallas-tpu", "observed": observed,
+                "events": len(log),
+                "ok": observed == ["pallas-tpu"] and len(log) == 1})
+    for mode in ("verify", "correct"):
+        _, log = jit_isolated(lambda a_, b_: tsmm.tsmm(a_, b_), a, b,
+                              policy=tsmm.GemmPolicy(abft=mode))
+        observed = sorted({e.executor for e in log})
+        flagged = [e for e in log if e.abft == mode]
+        out.append({"arm": f"abft_{mode}", "shape": [m, k, n],
+                    "expected": sorted({"dense-xla", "pallas-tpu"}),
+                    "observed": observed, "events": len(log),
+                    "abft": sorted({e.abft for e in log}),
+                    "ok": (observed == ["dense-xla", "pallas-tpu"]
+                           and len(log) == 4 and len(flagged) == 1)})
     # QR stages: both GEMMs of the CholeskyQR2 factorization (Gram and
     # R^-1 apply, every pass) must land on the tall-skinny kernels -- the
     # Gram as tsmt, the apply as tsm2l, and nothing on dense-xla. The

@@ -185,9 +185,9 @@ def main(argv=None) -> None:
                     help="override autotune shapes: kind:m,k,n;kind:m,k,n")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_ab, bench_ablation, bench_collectives,
-                            bench_e2e, bench_params, bench_qr, bench_rect,
-                            bench_tsm2l, bench_tsm2r)
+    from benchmarks import (bench_ab, bench_abft, bench_ablation,
+                            bench_collectives, bench_e2e, bench_params,
+                            bench_qr, bench_rect, bench_tsm2l, bench_tsm2r)
     sections = [
         ("Fig6/7+10/11: TSM2R speedup + utilization", bench_tsm2r.run),
         ("Fig5+13/14: TSM2L tcf sweep + speedup", bench_tsm2l.run),
@@ -198,6 +198,7 @@ def main(argv=None) -> None:
         ("int8_vs_f32: quantized kernel arms vs f32 oracle", bench_ab.run_int8),
         ("collectives: psum vs psum_scatter tsmm_t arms", bench_collectives.run),
         ("qr: tsqr vs dense-oracle vs gram-schmidt", bench_qr.run),
+        ("abft_overhead: online checksum arms vs abft=none", bench_abft.run),
         ("e2e: train/decode step throughput", bench_e2e.run),
     ]
     if args.sections:

@@ -31,6 +31,12 @@ Sections (one report entry each):
   sublane quantum, 1-byte tiles, caller-dtype output window), grid
   exactly, and pass the grid-dataflow verifier -- so the
   f32-accumulator rule provably covers the q8 kernels.
+* ``abft-resolved`` -- the online-ABFT surface (``GemmPolicy.abft``):
+  every (abft, quant, reduce) policy combo passes the backward-policy
+  contract (the guard mode survives into the VJP re-dispatch), and every
+  checksum-GEMM shape the wrap can emit
+  (:func:`contracts.abft_stage_shapes`) classifies dense or resolves to
+  a launchable, grid-exact config across specs and split arms.
 * ``qr-resolved`` -- every GEMM stage the ``repro.linalg`` QR subsystem
   can hand the resolver (:func:`contracts.qr_stage_shapes`: the Gram
   ``tsmt`` and apply ``tsm2l`` of CholeskyQR2, replicated and per-shard
@@ -78,6 +84,7 @@ __all__ = [
     "audit_kernel_dataflow",
     "audit_quant_configs",
     "audit_qr_configs",
+    "audit_abft_configs",
     "audit_tuning_table",
     "audit_policies",
     "audit_bench",
@@ -389,6 +396,59 @@ def audit_qr_configs(qr_shapes=QR_SWEEP_SHAPES, shards=QR_SWEEP_SHARDS,
     return checked, out
 
 
+def audit_abft_configs(shapes=None, specs=SWEEP_SPECS,
+                       splits=("auto", "never")):
+    """The online-ABFT surface: policy derivation and checksum shapes.
+
+    Two sweeps. (1) Every reachable (abft, quant, reduce) GemmPolicy combo
+    passes ``check_backward_policy`` against its derived backward -- the
+    ``abft-policy`` rule proves the guard mode survives into the VJP
+    re-dispatch. (2) Every checksum-GEMM shape the wrap can hand the
+    dispatcher (:func:`contracts.abft_stage_shapes` over the sweep
+    shapes) either classifies dense or resolves to a launchable,
+    grid-exact kernel config under every spec/split arm. Checksums are
+    f32 by construction (``ft.abft.checksum_weights``), so the sweep
+    pins f32; split arms are the ones the wrap's checksum policy can
+    carry -- "auto" and "never" (a pinned int split is neutralized to
+    "auto" by the wrap: the caller pinned S for the *protected* shape,
+    not the skinny checksum shapes)."""
+    shapes = shapes if shapes is not None else SWEEP_SHAPES
+    dtype = jnp.float32
+    checked, out = 0, []
+    for abft in ("none", "verify", "correct"):
+        for quant in ("none", "int8"):
+            for reduce_ in ("psum", "psum_scatter", "none"):
+                checked += 1
+                p = tsmm.GemmPolicy(abft=abft, quant=quant, reduce=reduce_)
+                out.extend(contracts.check_backward_policy(
+                    p, tsmm.backward_policy(p)))
+    for kind, kind_shapes in shapes.items():
+        for shape in kind_shapes:
+            for entry, stage in contracts.abft_stage_shapes(kind, shape):
+                for spec in specs:
+                    for split in splits:
+                        pol = tsmm.GemmPolicy(spec=spec, split=split)
+                        m, a_, b_ = stage
+                        kindc = (tsmm.classify_gemm(m, a_, b_, pol)
+                                 if entry == "mm"
+                                 else tsmm.classify_gemm_t(m, a_, b_, pol))
+                        checked += 1
+                        if kindc == "dense":
+                            continue  # XLA dot: no launch contract to check
+                        if kindc == "tsm2l" and split != "auto":
+                            continue  # tsm2l has no split dimension
+                        params = ops.resolve_params(
+                            kindc, m, a_, b_, dtype, pol, interpret=True)
+                        out.extend(v for v in contracts.check_kernel_config(
+                            kindc, stage, params, dtype, spec,
+                            max_b=tsmm.GemmPolicy().max_skinny_t)
+                            if v.rule != "accumulator-limit")
+                        out.extend(contracts.check_grid(
+                            kindc, _padded_shape(kindc, stage, params),
+                            params))
+    return checked, out
+
+
 def audit_tuning_table(table: autotune.TuningTable):
     """Every committed record re-checks under the table's fitted spec."""
     known = tuple(tsmm.executors())
@@ -510,6 +570,7 @@ def run_audit(*, bench_path=None, table_path=None, shapes=None) -> dict:
         "kernel-dataflow": audit_kernel_dataflow(shapes=shapes),
         "quant-resolved": audit_quant_configs(shapes=shapes),
         "qr-resolved": audit_qr_configs(),
+        "abft-resolved": audit_abft_configs(shapes=shapes),
         "policies": audit_policies(),
     }
     if table is not None:

@@ -56,7 +56,9 @@ __all__ = [
     "check_tuning_record",
     "executor_reduce_ok",
     "qr_stage_shapes",
+    "abft_stage_shapes",
     "TSMT_MAX_B",
+    "ABFT_TOL_FACTOR",
 ]
 
 KINDS = ("tsm2r", "tsm2l", "tsmt")
@@ -65,6 +67,15 @@ KINDS = ("tsm2r", "tsm2l", "tsmt")
 # VMEM tile; this is the hard cap on the small output dim (kernels/ops.py
 # re-exports it -- the value is a contract, so it lives here).
 TSMT_MAX_B = 512
+
+# Safety margin on the online-ABFT detection tolerance (``ft/abft.py``'s
+# ``tolerance``): the threshold is ABFT_TOL_FACTOR * eps * (sqrt(rows) +
+# sqrt(reduction) + 32) * column_magnitude. The sqrt terms are random-walk
+# rounding growth over the checksum reduction and the protected GEMM's own
+# contraction; the factor absorbs the distribution's tail (tuned against
+# the clean-run false-positive tests -- a genuine high-order bit flip sits
+# many orders of magnitude above this line, so the margin is cheap).
+ABFT_TOL_FACTOR = 16.0
 
 # Required param keys per kind (schema half of the tuning-record contract).
 PARAM_KEYS = {
@@ -450,6 +461,44 @@ def qr_stage_shapes(m: int, r: int, *, shards: int = 1
 
 
 # ---------------------------------------------------------------------------
+# Online-ABFT stage contracts
+# ---------------------------------------------------------------------------
+
+def abft_stage_shapes(kind: str, shape, s: int = 2
+                      ) -> tuple[tuple[str, tuple[int, int, int]], ...]:
+    """The checksum-GEMM (entry, shape) triples the online ABFT wrap
+    dispatches around one protected ``(kind, (m, d1, d2))`` GEMM, with
+    ``s`` checksum columns (>= 2: plain + ramp -- fewer cannot localize).
+
+    For ``tsm2r``/``tsm2l`` (``A(m,k) @ B(k,n)``, shape ``(m, k, n)``):
+    ``u = A^T e`` (mmt over m), ``c_ref = B^T u`` (mmt over k),
+    ``c_out = C^T e`` (mmt over m). For ``tsmt``
+    (``X(m,a)^T Y(m,b)``, shape ``(m, a, b)``): ``v = X e`` (mm over m),
+    ``c_ref^T = v^T Y`` (mmt over m), ``c_out = C^T e`` (mmt over a).
+
+    This is the contract ``audit_abft_configs`` sweeps: every checksum
+    shape the wrap can hand the dispatcher must classify, and when it
+    classifies to a kernel kind must resolve to a launchable config.
+    """
+    if s < 2:
+        raise ValueError(
+            f"abft_stage_shapes: s={s} checksum columns cannot localize "
+            "(need the plain column AND the ramp: s >= 2)")
+    m, d1, d2 = shape
+    if kind in ("tsm2r", "tsm2l"):
+        return (("mmt", (m, d1, s)),       # u = A^T e
+                ("mmt", (d1, d2, s)),      # c_ref = B^T u
+                ("mmt", (m, d2, s)))       # c_out = C^T e
+    if kind == "tsmt":
+        return (("mm", (m, d1, s)),        # v = X e
+                ("mmt", (m, s, d2)),       # c_ref^T = v^T Y
+                ("mmt", (d1, d2, s)))      # c_out = C^T e
+    raise ValueError(
+        f"abft_stage_shapes: unknown kind {kind!r}: the online wrap only "
+        f"protects {', '.join(KINDS)}")
+
+
+# ---------------------------------------------------------------------------
 # Collective-layout contracts
 # ---------------------------------------------------------------------------
 
@@ -491,7 +540,9 @@ def check_backward_policy(fwd, bwd) -> list[Violation]:
       recurse per-shard);
     * a forward-kind force degrades to "auto"; "dense"/"auto" survive;
     * ``quant`` is preserved verbatim (scope-wide numeric intent: an int8
-      scope keeps its cotangent GEMMs quantizable).
+      scope keeps its cotangent GEMMs quantizable);
+    * ``abft`` is preserved verbatim (scope-wide integrity intent: the
+      cotangent GEMMs of a verify/correct scope get their own checksums).
     """
     subject = f"backward_policy({fwd!r})"
     out = []
@@ -524,6 +575,13 @@ def check_backward_policy(fwd, bwd) -> list[Violation]:
             "backward-quant", subject,
             f"backward quant={getattr(bwd, 'quant', 'none')!r}, expected "
             f"{want_quant!r}: quant is scope-wide numeric intent and must "
+            "survive the VJP re-dispatch"))
+    want_abft = getattr(fwd, "abft", "none")
+    if getattr(bwd, "abft", "none") != want_abft:
+        out.append(Violation(
+            "abft-policy", subject,
+            f"backward abft={getattr(bwd, 'abft', 'none')!r}, expected "
+            f"{want_abft!r}: abft is scope-wide integrity intent and must "
             "survive the VJP re-dispatch"))
     return out
 

@@ -11,7 +11,9 @@ Layout (one directory per step)::
 Production properties:
 * **Atomicity**: a checkpoint is visible iff its rename committed; a
   preempted writer leaves only a .tmp dir that restore ignores and the
-  next save garbage-collects.
+  next save garbage-collects. Every payload file and the tmp dir are
+  fsync'd before the rename, and the parent directory after it -- the
+  commit point itself survives power loss, not just process death.
 * **Async**: ``save`` snapshots to host numpy (device->host copy) and
   returns; a worker thread does the serialization/fsync -- the training
   loop overlaps step N+1's compute with step N's I/O.
@@ -42,6 +44,17 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file OR directory (dirs need an O_RDONLY fd on Linux --
+    renaming inside a dir is a *directory* mutation, and only fsyncing the
+    dir makes the new entry durable)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class Checkpointer:
     def __init__(self, root: str, keep_n: int = 3, async_write: bool = True):
         self.root = root
@@ -57,10 +70,24 @@ class Checkpointer:
 
     # -- public API ---------------------------------------------------------
 
+    def _raise_pending(self):
+        """Re-raise (and clear) a failed async write. A silently dropped
+        checkpoint is the worst failure mode this class has: the loop keeps
+        running, retention GCs the older good steps, and the eventual
+        restore finds nothing. Both entry points the loop calls
+        (``save``/``wait``) funnel through here so the error surfaces at
+        the next step boundary; clearing lets the caller retry."""
+        if self._error is not None:
+            step, exc = self._error
+            self._error = None
+            raise RuntimeError(
+                f"[ckpt-async] async save of step {step} failed: {exc!r}"
+            ) from exc
+
     def save(self, step: int, tree, block: bool = False):
-        """Snapshot to host and enqueue the write. Returns immediately."""
-        if self._error:
-            raise RuntimeError(f"previous async save failed: {self._error}")
+        """Snapshot to host and enqueue the write. Returns immediately.
+        Raises if a previously enqueued save failed."""
+        self._raise_pending()
         leaves, treedef = _flatten(tree)
         host_leaves = [np.asarray(x) for x in leaves]   # device -> host
         if self.async_write and not block:
@@ -69,10 +96,9 @@ class Checkpointer:
             self._write(step, host_leaves, treedef)
 
     def wait(self):
-        """Block until all queued saves are durable."""
+        """Block until all queued saves are durable; raise if any failed."""
         self._q.join()
-        if self._error:
-            raise RuntimeError(f"async save failed: {self._error}")
+        self._raise_pending()
 
     def latest_step(self) -> int | None:
         steps = self.all_steps()
@@ -114,6 +140,23 @@ class Checkpointer:
             tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
         return tree, step
 
+    def restore_latest_good(self, shardings=None):
+        """Restore the newest checkpoint that passes integrity checks,
+        walking backwards past damaged ones (truncated arrays, crc
+        mismatches, missing files). This is the escalation path of the
+        train loop's rollback/retry: a live-state fault plus a damaged
+        newest checkpoint must still land on SOME consistent state."""
+        errors = []
+        for step in reversed(self.all_steps()):
+            try:
+                return self.restore(step, shardings=shardings)
+            except Exception as e:
+                errors.append((step, e))
+        raise FileNotFoundError(
+            f"[ckpt-none-good] no restorable checkpoint under {self.root}"
+            + (f"; tried {[(s, repr(e)) for s, e in errors]}" if errors else "")
+        )
+
     # -- internals ----------------------------------------------------------
 
     def _run(self):
@@ -122,7 +165,7 @@ class Checkpointer:
             try:
                 self._write(step, leaves, treedef)
             except Exception as e:  # surfaces on next save()/wait()
-                self._error = e
+                self._error = (step, e)
             finally:
                 self._q.task_done()
 
@@ -148,9 +191,20 @@ class Checkpointer:
             pickle.dump(treedef, f)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump({"step": step, "leaves": metas}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        for name in os.listdir(tmp):        # payloads durable pre-commit
+            if name != "manifest.json":
+                fd = os.open(os.path.join(tmp, name), os.O_RDONLY)
+                try:
+                    os.fsync(fd)
+                finally:
+                    os.close(fd)
+        _fsync_path(tmp)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)               # commit point
+        _fsync_path(self.root)              # make the rename itself durable
         self._gc()
 
     def _gc(self):

@@ -52,6 +52,11 @@ shape to an executor:
   those consumers.
 
 ``register_executor`` adds new backends; ``GemmPolicy.executor`` pins one.
+Every executor invocation passes through the deterministic fault-injection
+tap (``ft/inject.py``), and ``GemmPolicy.abft`` wraps kernel-kind results
+in an online Huang-Abraham checksum verify/locate/correct guard whose
+checksum GEMMs dispatch right back through this module (see the policy
+docstring and ``ft/abft.py``).
 
 DP axes are no longer a hard-coded convention: with
 ``GemmPolicy.dp_axes=None`` the dispatcher derives them from the ambient
@@ -85,6 +90,9 @@ from jax import lax
 from jax.sharding import PartitionSpec
 
 from repro.core import perf_model
+# inject sits below every layer (jax + stdlib only, no repro imports), so
+# the dispatcher can route each executor invocation through its fault tap.
+from repro.ft import inject as _inject
 from repro.kernels import compat, ops
 
 __all__ = [
@@ -141,6 +149,7 @@ _ALL_MODES = ("auto", "dense", "tsm2r", "tsm2l", "tsmt")
 _SHARD_MAP_MODES = ("auto", "never", "require", "local")
 _REDUCE_MODES = ("psum", "psum_scatter", "none")
 _QUANT_MODES = ("none", "int8")
+_ABFT_MODES = ("none", "verify", "correct")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,6 +279,35 @@ class GemmPolicy:
       numeric intent, so :func:`backward_policy` preserves it -- cotangent
       GEMMs under an int8 scope quantize too (expect looser gradient
       tolerances, as with any quantization-aware setup).
+
+    ``abft``: online algorithm-based fault tolerance for the kernel-kind
+    dispatches (``ft/abft.py`` owns the math; this knob owns the wiring):
+
+    * "none" (default) -- no checksums, zero overhead: the wrap is never
+      entered and the dispatch path is byte-identical to before the knob
+      existed.
+    * "verify" -- every tsm2r/tsm2l/tsmt result is checked against
+      Huang-Abraham weighted column checksums computed *through this same
+      dispatcher* (checksum linearity: the checksum of the output equals
+      the GEMM of the operand checksum), with a shape/dtype-derived
+      tolerance (``ft.abft.tolerance``). A detected silent data
+      corruption poisons the full output with NaN -- trace-safe, no host
+      callback -- so any non-finite guard downstream (the train loop's
+      ``step_ok``) sees it.
+    * "correct" -- additionally localizes a single faulty output row from
+      the ramp/plain checksum-deviation ratio and repairs it in place
+      (bit-flip faults repair bit-exactly via a nearest-single-bit-flip
+      snap); faults the localization cannot explain (multi-row damage,
+      non-finite wreckage) fall back to the NaN poison.
+
+    The checksum GEMMs dispatch with ``abft="none"`` (no recursion), f32
+    operands, and the scope's executor pin stripped. Dense-kind dispatches
+    are not wrapped (the stock XLA path is not the SDC surface this guards)
+    and neither are the *outer* shard_map events -- the per-shard
+    re-dispatch inherits ``abft`` through the inner policy, so each shard
+    verifies/corrects its own local GEMM. Scope-wide integrity intent, so
+    :func:`backward_policy` preserves it (contracts ``abft-policy`` rule):
+    cotangent GEMMs under a verify scope are verified too.
     """
 
     mode: str = "auto"
@@ -288,6 +326,7 @@ class GemmPolicy:
     reduce: str = "psum"
     split: str | int = "auto"
     quant: str = "none"
+    abft: str = "none"
     # Trace-time contract assertion: when set, kernels/ops re-checks every
     # resolved launch configuration against analysis.contracts (the same
     # predicates the perf model's candidate filter and the offline auditor
@@ -321,6 +360,10 @@ class GemmPolicy:
             raise ValueError(
                 f"unknown GemmPolicy quant {self.quant!r}: valid "
                 f"values are {', '.join(_QUANT_MODES)}")
+        if self.abft not in _ABFT_MODES:
+            raise ValueError(
+                f"unknown GemmPolicy abft {self.abft!r}: valid "
+                f"values are {', '.join(_ABFT_MODES)}")
 
     def with_(self, **overrides) -> "GemmPolicy":
         return dataclasses.replace(self, **overrides)
@@ -414,7 +457,9 @@ def backward_policy(p: GemmPolicy) -> GemmPolicy:
     scope-wide intent, like a dense pin. ``quant`` is likewise preserved
     (``dataclasses.replace`` carries it): an int8 scope keeps its
     cotangent GEMMs quantizable, per the contracts ``backward-quant``
-    rule."""
+    rule. ``abft`` is preserved the same way (contracts ``abft-policy``
+    rule): integrity intent is scope-wide, so cotangent GEMMs under a
+    verify/correct scope get their own checksums."""
     mode = p.mode if p.mode in ("auto", "dense") else "auto"
     reduce_ = "psum" if p.reduce == "none" else p.reduce
     split = "auto" if isinstance(p.split, int) else p.split
@@ -493,7 +538,16 @@ class DispatchEvent:
     noted (via :func:`note_launch`) -- the resolved grid, semantics and S,
     so spies can assert grid shape, not just routing. Dense/XLA arms note
     nothing; the outer event of a shard_map dispatch is also empty (the
-    per-shard re-dispatch events carry their own launches)."""
+    per-shard re-dispatch events carry their own launches).
+
+    ``abft`` records whether THIS dispatch's result is wrapped by the
+    online checksum guard ("none" | "verify" | "correct"): the protected
+    GEMM of an abft scope carries the mode, while the checksum GEMMs the
+    wrap itself dispatches carry "none" -- so a spy asserts exactly one
+    guarded event per protected call. ``faults`` carries the
+    ``ft.inject.GemmFault``s the injection tap actually applied inside
+    this dispatch (empty outside an injection scope), letting chaos tests
+    assert the planned fault landed where the plan said."""
 
     entry: str       # "mm" (A @ B) | "mmt" (X^T Y)
     kind: str        # "tsm2r" | "tsm2l" | "tsmt" | "dense"
@@ -502,6 +556,8 @@ class DispatchEvent:
     split: str | int = "auto"
     quant: str = "none"
     launches: tuple = ()       # of LaunchMeta
+    abft: str = "none"
+    faults: tuple = ()         # of ft.inject.GemmFault
 
 
 _LISTENERS: list = []
@@ -510,6 +566,11 @@ _LISTENERS: list = []
 # around their executor invocation (only while spies listen); the ops impls
 # report resolved launches into the innermost frame via note_launch.
 _LAUNCH_NOTES: list = []
+
+# Parallel stack of per-dispatch applied-fault collectors: _run_executor
+# reports the GemmFaults the injection tap landed into the innermost frame
+# so the emitted DispatchEvent carries them.
+_FAULT_NOTES: list = []
 
 
 def note_launch(kind: str, grid, dimension_semantics, splits: int = 1
@@ -524,28 +585,47 @@ def note_launch(kind: str, grid, dimension_semantics, splits: int = 1
 
 def _notify(entry: str, kind: str, executor: str, shape,
             split: str | int = "auto", quant: str = "none",
-            launches: tuple = ()) -> None:
+            launches: tuple = (), abft: str = "none",
+            faults: tuple = ()) -> None:
     if _LISTENERS:
         ev = DispatchEvent(entry, kind, executor, tuple(shape), split,
-                           quant, launches)
+                           quant, launches, abft, faults)
         for cb in tuple(_LISTENERS):
             cb(ev)
 
 
-def _dispatch(entry: str, kind: str, executor: str, shape, policy, run):
+def _run_executor(ex, entry, kind, a, b, p):
+    """Invoke a registered executor through the fault-injection tap
+    (``ft.inject.tap_executor``): outside an injection scope this is
+    exactly ``ex(...)``; inside one, the plan's bit flips for this
+    trace-order site apply and the applied faults land on the innermost
+    dispatch's event (when a spy is listening)."""
+    out, applied = _inject.tap_executor(ex, entry, kind, a, b, p)
+    if applied and _FAULT_NOTES:
+        _FAULT_NOTES[-1].extend(applied)
+    return out
+
+
+def _dispatch(entry: str, kind: str, executor: str, shape, policy, run,
+              abft: str = "none"):
     """Run the chosen executor, then emit the spy event carrying whatever
     launches the run noted. Without listeners this is just ``run()`` --
-    note_launch collectors only exist while a spy is attached."""
+    note_launch collectors only exist while a spy is attached. ``abft``
+    is the guard mode stamped on the event: the caller passes the policy's
+    mode only for the dispatch the online wrap actually protects."""
     if not _LISTENERS:
         return run()
     notes: list = []
+    fault_notes: list = []
     _LAUNCH_NOTES.append(notes)
+    _FAULT_NOTES.append(fault_notes)
     try:
         out = run()
     finally:
+        _FAULT_NOTES.pop()
         _LAUNCH_NOTES.pop()
         _notify(entry, kind, executor, shape, policy.split, policy.quant,
-                tuple(notes))
+                tuple(notes), abft, tuple(fault_notes))
     return out
 
 
@@ -919,6 +999,85 @@ def _resolve_policy(policy_: GemmPolicy | None,
 
 
 # ---------------------------------------------------------------------------
+# Online ABFT (GemmPolicy.abft): checksum wrap around the kernel dispatches
+# ---------------------------------------------------------------------------
+
+_ABFT_KINDS = ("tsm2r", "tsm2l", "tsmt")
+# The OUTER shard_map dispatch is not wrapped: its per-shard re-dispatch
+# inherits abft through _shard_map_env's inner policy, so every shard
+# verifies/corrects its local GEMM (a global checksum would need its own
+# cross-shard collective and would break the reduce="none" stacked layout).
+_ABFT_SKIP_EXECUTORS = ("shard_map", "shard_map-scatter")
+
+
+def _abft_wraps(kind: str, executor: str, p: GemmPolicy) -> bool:
+    """Does the online checksum guard wrap this dispatch?"""
+    return (p.abft != "none" and kind in _ABFT_KINDS
+            and executor not in _ABFT_SKIP_EXECUTORS)
+
+
+def _abft_guard(entry: str, x, y, out, p: GemmPolicy):
+    """Huang-Abraham checksum verify/correct for one protected dispatch.
+
+    Computes the output's weighted column checksums two ways -- directly
+    from ``out``, and by pushing the checksum vector through the operands
+    (linearity: ``e^T (A B) == (e^T A) B``) -- and hands both to
+    ``ft.abft.locate_and_correct``. All checksum GEMMs re-enter this
+    dispatcher under a neutralized policy (``abft="none"`` so the wrap
+    cannot recurse, f32 ``quant="none"`` operands so the reference is
+    exact, executor pin and shape-specific split pin stripped so the
+    checksum shapes classify for themselves) -- so the encode itself runs
+    on the paper's kernels, which is the whole point of online ABFT at
+    tall-skinny shapes. Operands/outputs pass through ``stop_gradient``:
+    the guard adds no backward cost, and on a clean (fault-free) run the
+    returned value is exactly ``out`` -- bit-identical, gradient-identical.
+
+    ``entry="mm"`` expects the collapsed 2-D views: x=(m, k), y=(k, n),
+    out=(m, n); checksum rows = m, reduction = k. ``entry="mmt"``:
+    x=(m, a), y=(m, b), out=(a, b); checksum rows = a, reduction = m.
+    """
+    from repro.ft import abft as _abft  # deferred: ft.abft imports tsmm
+
+    pc = dataclasses.replace(
+        p, abft="none", mode="auto", executor=None, quant="none",
+        split="auto" if isinstance(p.split, int) else p.split)
+    xs = lax.stop_gradient(x).astype(jnp.float32)
+    ys = lax.stop_gradient(y).astype(jnp.float32)
+    os_ = lax.stop_gradient(out).astype(jnp.float32)
+    ref_row = None
+    if entry == "mm":
+        rows, red = x.shape[0], x.shape[1]
+        e = _abft.checksum_weights(rows)
+        u = tsmm_t(xs, e, policy=pc)               # (k, s) = A^T e
+        c_ref = tsmm_t(ys, u, policy=pc)           # (n, s) = B^T (A^T e)
+        if p.abft == "correct":
+            # Dense recompute of ONE localized output row -- the snap
+            # reference accurate at the value's own scale (see
+            # ft.abft.locate_and_correct); a (1, k) @ (k, n) dot, so its
+            # cost is a rounding error on the wrap itself.
+            def ref_row(i):
+                r = lax.dynamic_slice_in_dim(xs, i, 1, axis=0)
+                return lax.dot_general(
+                    r, ys, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)[0]
+    else:
+        rows, red = out.shape[0], x.shape[0]
+        e = _abft.checksum_weights(rows)
+        v = tsmm(xs, e, policy=pc)                 # (m, s) = X e
+        c_ref = tsmm_t(v, ys, policy=pc).T         # (b, s) = ((X e)^T Y)^T
+        if p.abft == "correct":
+            def ref_row(i):
+                col = lax.dynamic_slice_in_dim(xs, i, 1, axis=1)
+                return lax.dot_general(
+                    col, ys, (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)[0]
+    c_out = tsmm_t(os_, e, policy=pc)              # (cols, s) = out^T e
+    return _abft.locate_and_correct(
+        out, c_out, c_ref, rows=rows, reduction=red, mode=p.abft,
+        eps=_abft.tolerance_eps(out.dtype, p.quant), ref_row=ref_row)
+
+
+# ---------------------------------------------------------------------------
 # Public entries
 # ---------------------------------------------------------------------------
 
@@ -951,11 +1110,19 @@ def tsmm(a: jnp.ndarray, b: jnp.ndarray, *, mode: str | None = None,
     def run():
         ex = _EXECUTORS[name]
         if a.ndim > 2 and name != "dense-xla":
-            out = ex("mm", kind, a.reshape(m_tall, k), b, p)
+            out = _run_executor(ex, "mm", kind, a.reshape(m_tall, k), b, p)
             return out.reshape(*a.shape[:-1], n)
-        return ex("mm", kind, a, b, p)
+        return _run_executor(ex, "mm", kind, a, b, p)
 
-    return _dispatch("mm", kind, name, (m_tall, k, n), p, run)
+    guard = _abft_wraps(kind, name, p)
+    out = _dispatch("mm", kind, name, (m_tall, k, n), p, run,
+                    abft=p.abft if guard else "none")
+    if guard:
+        a2 = a.reshape(m_tall, k) if a.ndim > 2 else a
+        o2 = out.reshape(m_tall, n) if a.ndim > 2 else out
+        o2 = _abft_guard("mm", a2, b, o2, p)
+        out = o2.reshape(*a.shape[:-1], n) if a.ndim > 2 else o2
+    return out
 
 
 def tsmm_t(x: jnp.ndarray, y: jnp.ndarray, *, mode: str | None = None,
@@ -983,8 +1150,14 @@ def tsmm_t(x: jnp.ndarray, y: jnp.ndarray, *, mode: str | None = None,
             else classify_gemm_t(m_tall, a_dim, b_dim, p))
     name = _select_executor("mmt", kind, m_tall, a_dim, b_dim, p,
                             forced is not None)
-    return _dispatch("mmt", kind, name, (m_tall, a_dim, b_dim), p,
-                     lambda: _EXECUTORS[name]("mmt", kind, x, y, p))
+    guard = _abft_wraps(kind, name, p)
+    out = _dispatch("mmt", kind, name, (m_tall, a_dim, b_dim), p,
+                    lambda: _run_executor(_EXECUTORS[name], "mmt", kind,
+                                          x, y, p),
+                    abft=p.abft if guard else "none")
+    if guard:
+        out = _abft_guard("mmt", x, y, out, p)
+    return out
 
 
 def bound_class(m: int, k: int, n: int, dtype=jnp.bfloat16,

@@ -34,7 +34,17 @@ def rescale_plan(*, devices=None, model_axis: int = 1,
                  host_index: int = 0, host_count: int = 1) -> RescalePlan:
     devices = devices if devices is not None else jax.devices()
     n = len(devices)
-    assert n % model_axis == 0
+    # ValueError, not assert: this runs in the relaunch path after a pod
+    # loss, exactly where `python -O` would have stripped an assert.
+    if model_axis < 1 or n % model_axis != 0:
+        raise ValueError(
+            f"[rescale-mesh] {n} surviving devices not divisible by "
+            f"model_axis={model_axis}; pick a model axis that divides the "
+            "device count (or shrink it before re-exec)")
+    if host_count < 1 or not 0 <= host_index < host_count:
+        raise ValueError(
+            f"[rescale-hosts] host_index={host_index} outside "
+            f"[0, host_count={host_count})")
     mesh = compat.make_mesh((n // model_axis, model_axis), ("data", "model"))
     return RescalePlan(mesh=mesh, host_index=host_index, host_count=host_count)
 

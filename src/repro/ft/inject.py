@@ -1,0 +1,268 @@
+"""Deterministic fault injection: seeded, replayable chaos for the FT stack.
+
+Two fault families, matching the two halves the fault-tolerance layer
+protects:
+
+* **GEMM faults** (``GemmFault`` + ``with faults(...)``): flip a chosen bit
+  of a chosen element of the Nth dispatched GEMM's operands or output. The
+  hook lives at the executor-registry boundary in ``core/tsmm.py`` (every
+  registered executor -- pallas-tpu, interpret, dense-xla, shard_map,
+  scatter, quantized scopes -- is invoked through :func:`tap_executor`), so
+  any arm the dispatcher can reach is injectable. Flips are trace-safe
+  ``bitcast ^ mask`` ops: under ``jax.jit`` they are baked into the traced
+  computation, so build a fresh trace (or call eagerly) per fault plan --
+  a cached jit function replays whatever plan it was traced under. Site
+  numbers count executor invocations in trace order within the scope; an
+  ABFT-wrapped entry dispatches its protected GEMM *before* its checksum
+  GEMMs, so the protected GEMM always takes the lower site.
+
+* **Checkpoint corruptors** (:func:`corrupt_checkpoint`): host-side damage
+  to a committed ``checkpoint/checkpointer.py`` directory -- a torn
+  ``.tmp`` dir (preempted writer), a truncated array file, or a bit-flipped
+  payload the manifest's crc32 must catch. All driven by a
+  ``random.Random(seed)`` instance: no wall clock, no global RNG state.
+
+``poison_tree`` is the train-loop chaos hook: overwrite one element of one
+float leaf (NaN by default) to model a transient in-memory fault that the
+step's non-finite detection must catch and roll back.
+
+Import discipline: jax + stdlib only, nothing from ``repro.*`` -- the
+dispatcher imports this module at the top level, so it must sit below
+every other layer.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import os
+import random
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "GemmFault",
+    "FaultScope",
+    "faults",
+    "active",
+    "current_scope",
+    "flip_bit",
+    "tap_executor",
+    "poison_tree",
+    "corrupt_checkpoint",
+]
+
+_OPERANDS = ("a", "b", "out")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmFault:
+    """One planned bit flip: at dispatch ``site``, flip ``bit`` of element
+    ``(row, col)`` of the named ``operand`` ("a" | "b" | "out"). ``row`` and
+    ``col`` index the 2-D view the executor sees (N-d lhs operands are
+    already collapsed to ``(tall, minor)`` at the tap)."""
+
+    site: int
+    operand: str = "out"
+    row: int = 0
+    col: int = 0
+    bit: int = 29
+
+    def __post_init__(self):
+        if self.operand not in _OPERANDS:
+            raise ValueError(
+                f"[inject-operand] unknown operand {self.operand!r}: valid "
+                f"targets are {', '.join(_OPERANDS)}"
+            )
+        if self.site < 0 or self.row < 0 or self.col < 0 or self.bit < 0:
+            raise ValueError(
+                f"[inject-fault] site/row/col/bit must be >= 0, got {self!r}"
+            )
+
+
+class FaultScope:
+    """Mutable per-scope state: the plan, the trace-order site counter, and
+    the faults actually applied (for assertions and replay logs)."""
+
+    def __init__(self, plan):
+        self.plan = tuple(plan)
+        self.sites_seen = 0
+        self.applied: list[GemmFault] = []
+
+    def next_site(self) -> int:
+        site = self.sites_seen
+        self.sites_seen += 1
+        return site
+
+
+_SCOPE: contextvars.ContextVar[FaultScope | None] = contextvars.ContextVar(
+    "repro_fault_scope", default=None
+)
+
+
+def active() -> bool:
+    """Is a fault plan currently in scope?"""
+    return _SCOPE.get() is not None
+
+
+def current_scope() -> FaultScope | None:
+    return _SCOPE.get()
+
+
+@contextlib.contextmanager
+def faults(*plan: GemmFault):
+    """Activate a deterministic GEMM fault plan for the scope.
+
+    Yields the :class:`FaultScope` (``.applied`` lists the faults whose
+    sites were actually reached). Scopes nest and restore on exit. The
+    site counter is per-scope: re-running the same computation under a
+    fresh scope with the same plan replays the same faults.
+    """
+    for f in plan:
+        if not isinstance(f, GemmFault):
+            raise TypeError(
+                f"[inject-plan] fault plans take GemmFault entries, got "
+                f"{type(f).__name__}"
+            )
+    scope = FaultScope(plan)
+    token = _SCOPE.set(scope)
+    try:
+        yield scope
+    finally:
+        _SCOPE.reset(token)
+
+
+def flip_bit(x, row: int, col: int, bit: int):
+    """Flip one bit of ``x[row, col]`` (2-D view), trace-safe for any fixed
+    width dtype: bitcast to the matching uint, XOR, bitcast back."""
+    nbits = jnp.dtype(x.dtype).itemsize * 8
+    if not 0 <= bit < nbits:
+        raise ValueError(
+            f"[inject-bit] bit {bit} outside [0, {nbits}) for dtype {x.dtype}"
+        )
+    udtype = jnp.dtype(f"uint{nbits}")
+    flat = x if x.ndim == 2 else x.reshape(-1, x.shape[-1])
+    u = lax.bitcast_convert_type(flat, udtype)
+    mask = jnp.asarray(1 << bit, udtype)
+    u = u.at[row, col].set(u[row, col] ^ mask)
+    return lax.bitcast_convert_type(u, x.dtype).reshape(x.shape)
+
+
+def tap_executor(ex, entry, kind, a, b, policy):
+    """Invoke executor ``ex`` with the active plan's faults for this
+    dispatch site applied: operand flips before the call, output flips
+    after. Returns ``(out, applied_faults)``; with no scope active this is
+    exactly ``(ex(...), ())``."""
+    scope = _SCOPE.get()
+    if scope is None:
+        return ex(entry, kind, a, b, policy), ()
+    site = scope.next_site()
+    hits = tuple(f for f in scope.plan if f.site == site)
+    for f in hits:
+        if f.operand == "a":
+            a = flip_bit(a, f.row, f.col, f.bit)
+        elif f.operand == "b":
+            b = flip_bit(b, f.row, f.col, f.bit)
+    out = ex(entry, kind, a, b, policy)
+    for f in hits:
+        if f.operand == "out":
+            out = flip_bit(out, f.row, f.col, f.bit)
+    if hits:
+        scope.applied.extend(hits)
+    return out, hits
+
+
+def poison_tree(tree, *, leaf_index: int = 0, value: float = float("nan")):
+    """Overwrite element 0 of the ``leaf_index``-th float array leaf with
+    ``value`` (NaN by default): the train-loop chaos hook for a transient
+    in-memory fault the step's non-finite detection must catch."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    float_ix = [
+        i
+        for i, x in enumerate(leaves)
+        if hasattr(x, "dtype")
+        and getattr(x, "size", 0) > 0
+        and jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+    ]
+    if not float_ix:
+        raise ValueError("[inject-poison] tree has no non-empty float leaves")
+    i = float_ix[leaf_index % len(float_ix)]
+    x = jnp.asarray(leaves[i])
+    flat = x.reshape(-1)
+    leaves[i] = flat.at[0].set(jnp.asarray(value, flat.dtype)).reshape(x.shape)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Host-side checkpoint corruptors
+# ---------------------------------------------------------------------------
+
+_CKPT_MODES = ("torn-tmp", "truncate", "bitflip")
+
+
+def _committed_steps(root: str) -> list[int]:
+    out = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(root, name, "manifest.json")):
+                out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def corrupt_checkpoint(root: str, *, mode: str, seed: int = 0,
+                       step: int | None = None) -> str:
+    """Deterministically damage a checkpoint directory; returns the damaged
+    path. Modes:
+
+    * ``"torn-tmp"``  -- create a partial ``step_*.tmp`` dir (a preempted
+      writer); restore must ignore it and the next save garbage-collects.
+    * ``"truncate"``  -- truncate one committed ``arr_*.npy`` to half size;
+      ``np.load`` / crc32 must fail the restore of that step.
+    * ``"bitflip"``   -- flip one payload bit of one committed array file;
+      the manifest crc32 must catch it.
+
+    ``seed`` drives every choice through ``random.Random`` -- same seed,
+    same damage. ``step=None`` targets the newest committed step (for
+    "torn-tmp": one past it).
+    """
+    if mode not in _CKPT_MODES:
+        raise ValueError(
+            f"[inject-ckpt-mode] unknown mode {mode!r}: valid modes are "
+            f"{', '.join(_CKPT_MODES)}"
+        )
+    rng = random.Random(seed)
+    steps = _committed_steps(root)
+    if mode == "torn-tmp":
+        torn_step = step if step is not None else (steps[-1] + 1 if steps else 0)
+        d = os.path.join(root, f"step_{torn_step:09d}.tmp")
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, "arr_00000.npy"), "wb") as f:
+            f.write(bytes(rng.getrandbits(8) for _ in range(64)))
+        return d
+    if step is None:
+        if not steps:
+            raise FileNotFoundError(
+                f"[inject-ckpt] no committed checkpoints under {root}"
+            )
+        step = steps[-1]
+    d = os.path.join(root, f"step_{step:09d}")
+    arrs = sorted(n for n in os.listdir(d) if n.endswith(".npy"))
+    target = os.path.join(d, arrs[rng.randrange(len(arrs))])
+    size = os.path.getsize(target)
+    if mode == "truncate":
+        with open(target, "r+b") as f:
+            f.truncate(max(1, size // 2))
+        return target
+    # bitflip: stay past the .npy header so the array *payload* is hit and
+    # only the crc32 (not the header parse) can catch it.
+    lo = 128 if size > 128 else 0
+    off = rng.randrange(lo, size)
+    with open(target, "r+b") as f:
+        f.seek(off)
+        byte = f.read(1)[0]
+        f.seek(off)
+        f.write(bytes([byte ^ (1 << rng.randrange(8))]))
+    return target

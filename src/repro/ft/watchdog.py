@@ -12,7 +12,15 @@ elastically (ft/elastic.py). The watchdog implements (a) and (b):
 
 Preemption: SIGTERM flips a flag the training loop checks at step
 boundaries -- the loop checkpoints and exits cleanly (tested by sending
-the signal in-process).
+the signal in-process); a previously installed handler is chained, not
+clobbered.
+
+``StepWatchdog`` is a context manager: ``with wd: step()`` records the
+step on clean exit and cancels the hang timer on an exception (a raising
+step must not leave a live timer to fire ``on_hang`` spuriously). It also
+counts ``fault_events`` -- the rollback/retry loop calls ``note_fault()``
+per detected step fault, so hang/straggler/fault telemetry lives in one
+place.
 """
 
 from __future__ import annotations
@@ -32,6 +40,8 @@ class StepWatchdog:
         self.on_hang = on_hang
         self.ewma = None
         self.straggler_events = 0
+        self.fault_events = 0
+        self.last_metrics = None
         self._timer = None
         self._t0 = None
 
@@ -41,11 +51,39 @@ class StepWatchdog:
             self._timer = threading.Timer(self.hang_timeout, self.on_hang)
             self._timer.daemon = True
             self._timer.start()
+        return self
+
+    def cancel(self):
+        """Stop the hang timer without recording the step (the step never
+        finished; a raise must not leave a live timer that later fires
+        ``on_hang`` against a loop that already moved on)."""
+        if self._timer:
+            self._timer.cancel()
+            self._timer = None
+
+    def note_fault(self):
+        """Telemetry: the loop detected a step fault (ABFT hit, non-finite
+        loss) and is rolling back. Counted separately from stragglers."""
+        self.fault_events += 1
+
+    # Context-manager form: ``with wd: step()``. A clean exit records the
+    # step (metrics land on ``last_metrics``); an exception cancels the
+    # hang timer and records nothing.
+    def __enter__(self):
+        return self.step_begin()
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is not None:
+            self.cancel()
+        else:
+            self.last_metrics = self.step_end()
+        return False
 
     def step_end(self) -> dict:
         dt = time.monotonic() - self._t0
         if self._timer:
             self._timer.cancel()
+            self._timer = None
         is_straggler = self.ewma is not None and dt > self.factor * self.ewma
         if is_straggler:
             self.straggler_events += 1
@@ -56,21 +94,32 @@ class StepWatchdog:
             self.ewma = dt
         elif not is_straggler:
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
-        return {"step_time_s": dt, "step_time_ewma_s": self.ewma,
-                "straggler": is_straggler}
+        self.last_metrics = {"step_time_s": dt, "step_time_ewma_s": self.ewma,
+                             "straggler": is_straggler,
+                             "fault_events": self.fault_events}
+        return self.last_metrics
 
 
 class PreemptionHandler:
-    """SIGTERM/SIGINT -> graceful stop flag for the training loop."""
+    """SIGTERM/SIGINT -> graceful stop flag for the training loop.
 
-    def __init__(self, signals=(signal.SIGTERM,)):
+    ``chain=True`` (default) also invokes whatever handler was installed
+    before us -- cluster runtimes (and pytest plugins) often hang their
+    own SIGTERM hooks, and silently replacing them breaks *their*
+    cleanup. ``restore()`` puts the previous handlers back."""
+
+    def __init__(self, signals=(signal.SIGTERM,), chain: bool = True):
         self.requested = False
+        self.chain = chain
         self._prev = {}
         for s in signals:
             self._prev[s] = signal.signal(s, self._handle)
 
     def _handle(self, signum, frame):
         self.requested = True
+        prev = self._prev.get(signum)
+        if self.chain and callable(prev):
+            prev(signum, frame)
 
     def restore(self):
         for s, h in self._prev.items():

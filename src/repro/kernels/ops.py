@@ -49,6 +49,17 @@ all run against the int8 *effective dtype*, so the grid that is scored,
 tuned and audited is the grid that launches. Outputs (and split partials,
 which are dequantized in-kernel) keep the unquantized path's dtypes
 exactly, so the reduce epilogue and the VJP rules below are unchanged.
+
+Online ABFT sits ABOVE this layer: the checksum wrap
+(``tsmm._abft_guard``) and the fault-injection tap
+(``ft.inject.tap_executor``) both live at the dispatcher's
+executor-registry boundary, so every arm routed through ``repro.core.tsmm``
+-- including the split and quantized paths here -- is guarded and
+injectable, while the impls in this module stay checksum-free. Calling
+``ops.tsm2r``/``tsm2l``/``tsmt`` directly bypasses both the guard and
+the tap; the
+backward re-dispatch goes through ``tsmm`` and so re-enters them
+(``tsmm.backward_policy`` preserves ``GemmPolicy.abft``).
 """
 
 from __future__ import annotations

@@ -6,6 +6,14 @@ checkpointing, ABFT verification, straggler watchdog, preemption handling,
 and elastic restore. This is the entry point a cluster scheduler re-execs
 on every (re)start; all state recovery is automatic.
 
+Step-fault rollback/retry: each step's ``step_ok`` metric (finite loss +
+grad norm; an online-ABFT NaN-poison from ``--abft verify|correct`` trips
+it too) gates a retry ladder -- roll back to the last in-memory host
+snapshot and replay (bounded by ``--max-step-retries``), then escalate to
+``Checkpointer.restore_latest_good``, then give up with a tagged error.
+``--chaos-step N`` injects a one-shot NaN into the state before step N to
+exercise exactly this path (see tests/test_train_rollback.py).
+
     python -m repro.launch.train --arch llama3.2-3b --steps 200 \
         --global-batch 8 --seq-len 128 --smoke --ckpt-dir /tmp/run1
 
@@ -18,6 +26,7 @@ code path runs with the host mesh (--smoke uses reduced configs).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 import sys
 import time
@@ -45,6 +54,18 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--abft-every", type=int, default=0,
                     help="verify param checksums every N steps (0=off)")
+    ap.add_argument("--abft", choices=("none", "verify", "correct"),
+                    default="none",
+                    help="online per-GEMM checksum guard (GemmPolicy.abft)")
+    ap.add_argument("--max-step-retries", type=int, default=2,
+                    help="in-memory rollback replays per fault episode "
+                         "before escalating to a checkpoint restore")
+    ap.add_argument("--snapshot-every", type=int, default=1,
+                    help="refresh the rollback host snapshot every N good "
+                         "steps (0=never; faults then escalate directly)")
+    ap.add_argument("--chaos-step", type=int, default=-1,
+                    help="inject a one-shot NaN into the state before this "
+                         "step (fault-injection drill; -1=off)")
     ap.add_argument("--powersgd-rank", type=int, default=0,
                     help="gradient compression rank (0=off)")
     ap.add_argument("--model-axis", type=int, default=1)
@@ -62,9 +83,10 @@ def main(argv=None):
 
     from repro.checkpoint.checkpointer import Checkpointer
     from repro.configs import registry
+    from repro.core import tsmm
     from repro.data import pipeline
     from repro.distributed import sharding
-    from repro.ft import abft, elastic, watchdog
+    from repro.ft import abft, elastic, inject, watchdog
     from repro.launch.mesh import make_host_mesh
     from repro.optim import adamw, powersgd, schedule
     from repro.train import train_step as ts
@@ -133,7 +155,6 @@ def main(argv=None):
                 out_shardings=(state_named if extra is None else None),
             )(jax.random.PRNGKey(0))
 
-    checksums = None
     wd = watchdog.StepWatchdog(
         on_straggler=lambda dt, ewma: print(
             f"[watchdog] straggler step: {dt:.2f}s vs ewma {ewma:.2f}s "
@@ -141,47 +162,116 @@ def main(argv=None):
     preempt = watchdog.PreemptionHandler()
     prefetch = pipeline.Prefetcher(dcfg, start_step=start_step)
 
+    def refetch(from_step):
+        nonlocal prefetch
+        prefetch.close()
+        prefetch = pipeline.Prefetcher(dcfg, start_step=from_step)
+
+    # Rollback ladder state: last-known-good in-memory snapshot, bounded
+    # replays per fault episode, then checkpoint escalation.
+    snap = None                       # (step, host pytree)
+    retries_left = args.max_step_retries
+    total_retries = 0
+    chaos_pending = args.chaos_step >= 0
+    last_metrics = {}
+
+    abft_scope = (tsmm.policy(abft=args.abft) if args.abft != "none"
+                  else contextlib.nullcontext())
     t_start = time.time()
     try:
-        for _ in range(start_step, args.steps):
-            step, host_batch = prefetch.get()
-            batch = jax.tree.map(jnp.asarray, host_batch)
-            wd.step_begin()
-            with mesh:
-                state, metrics = step_fn(state, batch)
-            wm = wd.step_end()
-            if step % args.log_every == 0 or step == args.steps - 1:
-                print(f"[train] step {step} loss {float(metrics['loss']):.4f} "
-                      f"acc {float(metrics['accuracy']):.3f} "
-                      f"gnorm {float(metrics['grad_norm']):.2f} "
-                      f"{wm['step_time_s']:.2f}s", flush=True)
-            if ckpt and (step % args.ckpt_every == 0 or step == args.steps - 1
-                         or preempt.requested):
-                if args.abft_every and step % args.abft_every == 0:
-                    # encode, snapshot, verify: catches SDC landing on the
-                    # params between the checksum pass and the host copy
-                    # (checksum linearity also covers the DP all-reduce --
-                    # see ft/abft.py + tests/test_ft.py).
-                    checksums = abft.encode_tree(state["params"])
-                ckpt.save(step, state)
-                if checksums is not None:
-                    ok, _ = abft.verify_tree(state["params"], checksums)
-                    if not bool(ok):
-                        raise RuntimeError(
-                            "[abft] silent data corruption detected in params"
-                            " -- discarding checkpoint; restore + replay")
-            if preempt.requested:
-                print("[train] preemption requested: checkpointed, exiting 42")
-                ckpt and ckpt.wait()
-                sys.exit(42)   # scheduler contract: re-exec to resume
+        with abft_scope:
+            cur = start_step
+            while cur < args.steps:
+                step, host_batch = prefetch.get()
+                batch = jax.tree.map(jnp.asarray, host_batch)
+                if chaos_pending and step == args.chaos_step:
+                    # One-shot drill: a transient in-memory fault the
+                    # step_ok gate must catch and the ladder must undo.
+                    # Target the params subtree specifically -- the fault
+                    # must surface in THIS step's loss, not launder
+                    # through the optimizer state into a state the gate
+                    # passes (and the snapshot would then preserve).
+                    state = {**state,
+                             "params": inject.poison_tree(state["params"])}
+                    chaos_pending = False
+                    print(f"[chaos] poisoned state before step {step}")
+                with wd:
+                    with mesh:
+                        state, metrics = step_fn(state, batch)
+                    step_ok = bool(metrics["step_ok"])
+                if not step_ok:
+                    wd.note_fault()
+                    total_retries += 1
+                    if retries_left > 0 and snap is not None:
+                        retries_left -= 1
+                        state = ts.restore_snapshot(snap[1])
+                        cur = snap[0] + 1
+                        refetch(cur)
+                        print(f"[ft] step {step} fault: rolled back to "
+                              f"snapshot at step {snap[0]}, replaying "
+                              f"({retries_left} retries left)", flush=True)
+                        continue
+                    if ckpt and ckpt.all_steps():
+                        state, rstep = ckpt.restore_latest_good()
+                        state = jax.tree.map(jnp.asarray, state)
+                        cur = rstep + 1
+                        refetch(cur)
+                        snap = None
+                        retries_left = args.max_step_retries
+                        print(f"[ft] step {step} fault: retries exhausted, "
+                              f"restored checkpoint step {rstep}", flush=True)
+                        continue
+                    raise RuntimeError(
+                        f"[ft-retries] step {step} faulted with no snapshot "
+                        "retries left and no restorable checkpoint")
+                # -- good step ------------------------------------------
+                retries_left = args.max_step_retries
+                last_metrics = metrics
+                wm = wd.last_metrics
+                if args.snapshot_every and step % args.snapshot_every == 0:
+                    snap = (step, ts.host_snapshot(state))
+                if step % args.log_every == 0 or step == args.steps - 1:
+                    print(f"[train] step {step} "
+                          f"loss {float(metrics['loss']):.4f} "
+                          f"acc {float(metrics['accuracy']):.3f} "
+                          f"gnorm {float(metrics['grad_norm']):.2f} "
+                          f"{wm['step_time_s']:.2f}s", flush=True)
+                if ckpt and (step % args.ckpt_every == 0
+                             or step == args.steps - 1 or preempt.requested):
+                    if args.abft_every and step % args.abft_every == 0:
+                        # encode -> verify -> save: the verify re-encodes,
+                        # catching SDC landing on the params between the
+                        # two passes, BEFORE the state is persisted -- a
+                        # detected-corrupt tree must never become the
+                        # newest checkpoint.
+                        checksums = abft.encode_tree(state["params"])
+                        ok, _ = abft.verify_tree(state["params"], checksums)
+                        if not bool(ok):
+                            raise RuntimeError(
+                                "[abft] silent data corruption detected in "
+                                "params -- refusing to persist; restore + "
+                                "replay")
+                    ckpt.save(step, state)
+                if preempt.requested:
+                    print("[train] preemption requested: checkpointed, "
+                          "exiting 42")
+                    ckpt and ckpt.wait()
+                    sys.exit(42)   # scheduler contract: re-exec to resume
+                cur = step + 1
     finally:
         prefetch.close()
+        preempt.restore()
         if ckpt:
             ckpt.wait()
     dt = time.time() - t_start
     steps_run = args.steps - start_step
     print(f"[train] done: {steps_run} steps in {dt:.1f}s "
-          f"({steps_run / max(dt, 1e-9):.2f} steps/s)")
+          f"({steps_run / max(dt, 1e-9):.2f} steps/s); "
+          f"fault retries: {total_retries}")
+    return {"final_loss": float(last_metrics.get("loss", float("nan"))),
+            "final_step": args.steps - 1,
+            "fault_retries": total_retries,
+            "fault_events": wd.fault_events}
 
 
 if __name__ == "__main__":

@@ -3,6 +3,13 @@ microbatching (lax.scan) and optional PowerSGD-compressed DP reduction.
 
 The returned ``train_step`` is a pure function suitable for jit/pjit AOT
 lowering (the dry-run compiles exactly this).
+
+Fault-tolerance hooks: every step's metrics carry ``step_ok`` (loss and
+grad norm both finite -- the device-side half of the launcher's
+fault-or-retry decision; an ABFT NaN-poison from ``GemmPolicy.abft``
+trips it just like a numeric blowup), and ``host_snapshot`` /
+``restore_snapshot`` give the rollback loop a cheap last-known-good copy
+of the state without a checkpoint round-trip.
 """
 
 from __future__ import annotations
@@ -10,6 +17,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import losses, model
 from repro.optim import adamw
@@ -114,6 +122,12 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *, n_micro: int = 0,
         params, opt_state, om = adamw.update(opt_cfg, params, grads, opt_state,
                                              update_specs=opt_update_specs)
         metrics = {"loss": loss, **aux, **om, **gmetrics}
+        # Device-side step-fault flag: non-finite loss or grad norm means
+        # the state transition this step produced is untrustworthy (SDC
+        # NaN-poison, overflow, data damage) -- the launcher rolls back
+        # instead of checkpointing it.
+        metrics["step_ok"] = jnp.isfinite(loss) & jnp.isfinite(
+            jnp.asarray(om.get("grad_norm", jnp.float32(0.0))))
         new_state = {"params": params, "opt": opt_state}
         if extra is not None:
             new_state["extra"] = extra
@@ -128,3 +142,29 @@ def init_train_state(key, cfg, opt_cfg: adamw.AdamWConfig, extra=None):
     if extra is not None:
         state["extra"] = extra
     return state
+
+
+def host_snapshot(state):
+    """Deep host-numpy copy of the train state for in-memory rollback.
+
+    ``np.asarray`` on a jax array is a device->host copy, so the snapshot
+    is immune to later donation/aliasing of the live buffers. Cheaper than
+    a checkpoint (no serialization, no fsync) -- this is the first line of
+    the retry ladder; the Checkpointer is the escalation."""
+    return jax.tree.map(lambda x: np.array(np.asarray(x)), state)
+
+
+def restore_snapshot(snapshot, like=None, device=None):
+    """Rebuild device arrays from a :func:`host_snapshot`.
+
+    ``like``: optional live state pytree whose shardings the restored
+    arrays should follow (multi-device rollback); ``device``: explicit
+    placement. With neither, default placement applies."""
+    def put(path_x):
+        return jax.device_put(path_x, device)
+
+    if like is not None:
+        return jax.tree.map(
+            lambda x, l: jax.device_put(x, getattr(l, "sharding", None)),
+            snapshot, like)
+    return jax.tree.map(put, snapshot)

@@ -12,7 +12,7 @@ import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data import pipeline
-from repro.ft import abft, watchdog
+from repro.ft import abft, elastic, watchdog
 
 
 def _tree(key):
@@ -113,6 +113,34 @@ def test_watchdog_flags_straggler():
     assert wd.ewma < 0.03
 
 
+def test_watchdog_context_manager_cancels_on_exception():
+    hangs = []
+    wd = watchdog.StepWatchdog(hang_timeout_s=0.05,
+                               on_hang=lambda: hangs.append(1))
+    with pytest.raises(RuntimeError):
+        with wd:
+            raise RuntimeError("step died")
+    assert wd._timer is None  # timer cancelled, not leaked
+    time.sleep(0.1)
+    assert hangs == []  # a raising step must not fire on_hang later
+    with wd:
+        time.sleep(0.01)
+    assert wd.last_metrics is not None
+    assert wd.last_metrics["step_time_s"] >= 0.01
+
+
+def test_watchdog_counts_faults():
+    wd = watchdog.StepWatchdog()
+    with wd:
+        pass
+    wd.note_fault()
+    wd.note_fault()
+    assert wd.fault_events == 2
+    with wd:
+        pass
+    assert wd.last_metrics["fault_events"] == 2
+
+
 def test_preemption_flag():
     h = watchdog.PreemptionHandler(signals=(signal.SIGUSR1,))
     assert not h.requested
@@ -120,6 +148,54 @@ def test_preemption_flag():
     time.sleep(0.05)
     assert h.requested
     h.restore()
+
+
+def test_preemption_chains_previous_handler():
+    chained = []
+    prev = signal.signal(signal.SIGUSR1, lambda s, f: chained.append(s))
+    try:
+        h = watchdog.PreemptionHandler(signals=(signal.SIGUSR1,))
+        os.kill(os.getpid(), signal.SIGUSR1)
+        time.sleep(0.05)
+        assert h.requested and chained == [signal.SIGUSR1]
+        h.restore()
+        # restore() put OUR lambda back, not the default
+        assert signal.getsignal(signal.SIGUSR1) is not signal.SIG_DFL
+    finally:
+        signal.signal(signal.SIGUSR1, prev)
+
+
+def test_rescale_plan_validates():
+    with pytest.raises(ValueError, match=r"\[rescale-mesh\]"):
+        elastic.rescale_plan(devices=list(range(3)), model_axis=2)
+    with pytest.raises(ValueError, match=r"\[rescale-hosts\]"):
+        elastic.rescale_plan(devices=list(range(2)), host_index=2,
+                             host_count=2)
+    with pytest.raises(ValueError, match=r"\[rescale-hosts\]"):
+        elastic.rescale_plan(devices=list(range(2)), host_count=0)
+
+
+def test_checkpoint_async_error_surfaces_and_clears(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_write=True)
+    ckpt.save(1, {"w": jnp.ones((4, 4))})
+    ckpt.wait()
+    # simulate a disk failure inside the worker thread (chmod tricks don't
+    # work under root): the failure must surface on the next wait()
+    real_write = ckpt._write
+
+    def failing_write(step, leaves, treedef):
+        if step == 2:
+            raise IOError("disk full")
+        real_write(step, leaves, treedef)
+
+    ckpt._write = failing_write
+    ckpt.save(2, {"w": jnp.ones((4, 4))})
+    with pytest.raises(RuntimeError, match=r"\[ckpt-async\].*step 2"):
+        ckpt.wait()
+    # the error cleared: the next save/wait cycle works again
+    ckpt.save(3, {"w": jnp.ones((4, 4))})
+    ckpt.wait()
+    assert 3 in ckpt.all_steps()
 
 
 def test_elastic_data_rebalance_preserves_stream():
